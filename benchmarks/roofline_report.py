@@ -1,0 +1,121 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from the sweep JSONL.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_sweep.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+GB = 1e9
+TB = 1e12
+
+
+def _lever(rec: dict) -> str:
+    """One sentence: what would move the dominant term down."""
+    ro = rec.get("roofline", {})
+    dom = ro.get("dominant", "?")
+    arch, shape = rec.get("arch", ""), rec.get("shape", "")
+    if arch == "svm-hss-admm":
+        return ("memory-bound leaf G·b einsums: fuse leaf solve into one "
+                "batched triangular pass (or bf16 leaf factors)")
+    if dom == "memory":
+        if "decode" in rec.get("kind", ""):
+            return ("decode reads the whole KV cache per token: quantize "
+                    "cache to int8 / shrink via GQA-sharing")
+        return ("attention score traffic in the XLA fallback dominates: the "
+                "Pallas flash kernel keeps tiles in VMEM (projected below)")
+    if dom == "collective":
+        return ("TP all-reduce per layer dominates: overlap with compute "
+                "(async collectives) or shift TP->more DP/FSDP")
+    return ("compute-bound: raise per-chip utilization via larger "
+            "microbatch or reduce remat recompute")
+
+
+def load(path: str) -> list[dict]:
+    return [json.loads(l) for l in open(path)]
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | args GB/dev | temp GB/dev | "
+        "compile s | collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "ok":
+            m = r["memory"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{m['argument_bytes']/GB:.2f} | {m['temp_bytes']/GB:.2f} | "
+                f"{r['compile_s']} | {r['collectives']['n_collectives']} |")
+        else:
+            reason = r.get("reason", r.get("error", ""))[:60]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"SKIP — {reason} | | | | |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | t_comp s | t_mem s | t_coll s | dominant | "
+        "bound s | MODEL/HLO flops | lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok" or r["mesh"] != "16x16":
+            continue
+        ro = r["roofline"]
+        ratio = r.get("model_vs_hlo_flops")
+        ratio_s = f"{ratio:.3f}" if ratio else "—"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['t_compute_s']:.3g} | "
+            f"{ro['t_memory_s']:.3g} | {ro['t_collective_s']:.3g} | "
+            f"{ro['dominant']} | {ro['step_time_bound_s']:.3g} | {ratio_s} | "
+            f"{_lever(r)} |")
+    return "\n".join(lines)
+
+
+def interesting_cells(recs: list[dict]) -> str:
+    """Pick the three hill-climb cells per the assignment."""
+    ok = [r for r in recs
+          if r["status"] == "ok" and r["mesh"] == "16x16"
+          and r.get("arch") != "svm-hss-admm"]
+    worst_fraction = max(
+        ok, key=lambda r: (r["roofline"]["step_time_bound_s"] /
+                           max(r["roofline"]["t_compute_s"], 1e-12)))
+    most_coll = max(ok, key=lambda r: r["roofline"]["t_collective_s"])
+    out = [
+        f"* worst roofline fraction (bound/compute): "
+        f"{worst_fraction['arch']} x {worst_fraction['shape']} "
+        f"(bound {worst_fraction['roofline']['step_time_bound_s']:.3g}s vs "
+        f"compute {worst_fraction['roofline']['t_compute_s']:.3g}s)",
+        f"* most collective-bound: {most_coll['arch']} x "
+        f"{most_coll['shape']} "
+        f"(t_coll {most_coll['roofline']['t_collective_s']:.3g}s)",
+        "* paper-representative: mamba2-780m x train_4k (SSD = semiseparable"
+        " evaluation, DESIGN.md §5) + the svm-hss-admm cell itself",
+    ]
+    return "\n".join(out)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_sweep.jsonl"
+    recs = load(path)
+    # dedup: keep the LAST record per cell (later runs supersede)
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    recs = list(seen.values())
+    print("## Dry-run matrix\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16, per device)\n")
+    print(roofline_table(recs))
+    print("\n## Hill-climb cell selection\n")
+    print(interesting_cells(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""End-to-end LM training driver over the assigned-architecture substrate.
+
+Wraps repro.launch.train: pick any --arch from the pool; "tiny"/"small"
+presets run on CPU, "full" is the production-mesh configuration (the one
+the dry-run lowers).  Checkpoints + resume + failure drill included:
+
+  PYTHONPATH=src python examples/lm_train.py --arch gemma2-9b --steps 300
+  PYTHONPATH=src python examples/lm_train.py --arch mamba2-780m --steps 100 \
+      --fail-at 50           # exercises checkpoint-restart mid-run
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+if __name__ == "__main__":
+    from repro.launch import train
+
+    if "--preset" not in " ".join(sys.argv):
+        sys.argv += ["--preset", "small"]
+    if "--ckpt-dir" not in " ".join(sys.argv):
+        sys.argv += ["--ckpt-dir", "/tmp/repro_lm_train"]
+    train.main()

@@ -1,0 +1,14 @@
+"""Batched serving demo: prefill + decode with KV/SSM caches.
+
+  PYTHONPATH=src python examples/serve_demo.py --arch zamba2-1.2b
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+if __name__ == "__main__":
+    from repro.launch import serve
+
+    if "--arch" not in " ".join(sys.argv):
+        sys.argv += ["--arch", "gemma2-9b"]
+    serve.main()

@@ -1,0 +1,15 @@
+"""repro — HSS-ADMM nonlinear SVM training framework (Cipolla & Gondzio 2021) in JAX.
+
+Layers:
+  repro.core      — the paper's contribution: HSS kernel approximation + ADMM SVM.
+  repro.kernels   — Pallas TPU kernels (gaussian blocks, SSD, attention, ADMM update).
+  repro.models    — LM substrate for the assigned architecture pool.
+  repro.configs   — architecture configs (``--arch <id>``).
+  repro.train     — optimizers, training loop, gradient compression.
+  repro.ckpt      — checkpointing + elastic reshard.
+  repro.dist      — sharding rules, pipeline, fault handling.
+  repro.launch    — mesh, dry-run, train/serve drivers.
+  repro.roofline  — roofline-term extraction from compiled artifacts.
+"""
+
+__version__ = "1.0.0"

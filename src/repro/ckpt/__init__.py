@@ -1,0 +1,6 @@
+"""Checkpointing: manifest + per-leaf shard files, async save, elastic reshard."""
+
+from repro.ckpt.checkpoint import (CheckpointManager, load_checkpoint,
+                                   save_checkpoint)
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]

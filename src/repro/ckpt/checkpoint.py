@@ -1,0 +1,187 @@
+"""Fault-tolerant checkpointing.
+
+Layout: one directory per step containing
+  manifest.json          — step, leaf paths, shapes, dtypes, shard counts,
+                           mesh shape at save time
+  <leaf-path>.<i>.npz    — zstd-compressed shard i of the leaf (split along
+                           dim 0, one file per save-shard)
+
+Design points mirroring multi-host practice:
+  * per-leaf SHARD files: on a real cluster each host writes only its local
+    shards (here: a configurable shard count emulates that layout);
+  * ELASTIC restore: the loader reassembles full arrays from any shard
+    count and re-device_puts them under ANY target mesh/sharding — a
+    checkpoint written on mesh A restores onto mesh B (tested 8 -> 4 -> 1
+    devices in tests/test_ckpt.py);
+  * atomicity: writes go to ``<dir>.tmp`` then rename; a crashed save never
+    corrupts the latest good checkpoint;
+  * async: ``CheckpointManager.save_async`` snapshots to host memory
+    synchronously (cheap) and writes to disk on a worker thread so the train
+    loop is not blocked by IO.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+try:
+    import zstandard as zstd
+
+    def _compress(b: bytes) -> bytes:
+        return zstd.ZstdCompressor(level=3).compress(b)
+
+    def _decompress(b: bytes) -> bytes:
+        return zstd.ZstdDecompressor().decompress(b)
+except Exception:                                    # pragma: no cover
+    _compress = _decompress = lambda b: b
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        key = getattr(p, "key", getattr(p, "name", getattr(p, "idx", p)))
+        parts.append(str(key))
+    return ".".join(parts) or "root"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out[_path_str(path)] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save_checkpoint(directory: str, tree: PyTree, step: int,
+                    n_shards: int = 4, extra: dict | None = None) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _flatten(tree)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for name, arr in leaves.items():
+        shards = max(1, min(n_shards, arr.shape[0] if arr.ndim else 1))
+        pieces = np.array_split(arr, shards, axis=0) if arr.ndim else [arr]
+        manifest["leaves"][name] = dict(
+            shape=list(arr.shape), dtype=str(arr.dtype), shards=shards,
+            shard_shapes=[list(p.shape) for p in pieces])
+        for i, piece in enumerate(pieces):
+            # raw bytes (not np.save): survives ml_dtypes (bfloat16 etc.)
+            with open(os.path.join(tmp, f"{name}.{i}.npz"), "wb") as f:
+                f.write(_compress(np.ascontiguousarray(piece).tobytes()))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, template: PyTree, step: int | None = None,
+                    shardings: PyTree | None = None) -> tuple[PyTree, int]:
+    """Restore onto the CURRENT mesh (elastic: any device count/layout).
+
+    ``template`` provides the pytree structure; ``shardings`` (optional,
+    matching pytree of NamedSharding) places each leaf — this is the
+    elastic-rescale path: the checkpoint's own mesh is irrelevant.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    leaves_tpl, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_tpl))
+    out = []
+    import ml_dtypes  # noqa: F401 — registers bfloat16 et al. with numpy
+
+    for (pth, tpl), sh in zip(leaves_tpl, shard_leaves):
+        name = _path_str(pth)
+        meta = manifest["leaves"][name]
+        dtype = np.dtype(meta["dtype"])
+        pieces = []
+        for i in range(meta["shards"]):
+            with open(os.path.join(path, f"{name}.{i}.npz"), "rb") as f:
+                raw = _decompress(f.read())
+            pieces.append(np.frombuffer(raw, dtype=dtype).reshape(
+                meta["shard_shapes"][i]))
+        arr = np.concatenate(pieces, axis=0) if len(pieces) > 1 else pieces[0]
+        arr = arr.reshape(meta["shape"])
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out), step
+
+
+class CheckpointManager:
+    """Async save + retention + resume."""
+
+    def __init__(self, directory: str, keep: int = 3, n_shards: int = 4):
+        self.directory = directory
+        self.keep = keep
+        self.n_shards = n_shards
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save_async(self, tree: PyTree, step: int,
+                   extra: dict | None = None) -> None:
+        self.wait()
+        host_tree = _flatten(tree)   # snapshot BEFORE returning control
+
+        def work():
+            try:
+                packed = {}
+                for k, v in host_tree.items():
+                    packed[k] = v
+                # rebuild a flat dict tree; save_checkpoint re-flattens
+                save_checkpoint(self.directory, packed, step,
+                                n_shards=self.n_shards, extra=extra)
+                self._gc()
+            except Exception as e:    # pragma: no cover
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore(self, template: PyTree, shardings: PyTree | None = None,
+                step: int | None = None):
+        return load_checkpoint(self.directory, template, step, shardings)

@@ -1,0 +1,5 @@
+"""Architecture configs (one file per assigned arch) + registry."""
+
+from repro.configs.registry import ARCH_IDS, get_config, list_archs
+
+__all__ = ["ARCH_IDS", "get_config", "list_archs"]

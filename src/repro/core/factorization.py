@@ -1,0 +1,189 @@
+"""ULV-equivalent direct factorization of the shifted HSS matrix.
+
+The paper factorizes K̃_β = K̃ + βI once per (h, β) with STRUMPACK's ULV
+(Chandrasekaran–Gu–Pals) and then solves one system per ADMM iteration and
+reuses the factorization across the whole C grid.  ULV's node-sequential
+orthogonal eliminations are hostile to the MXU/jit, so we compute the
+mathematically equivalent telescoping inversion (Gillman–Martinsson HBS
+solver), which has the identical compute pattern — O(N r^2) factor once,
+O(N r) per solve — but runs as *batched dense ops per tree level*:
+
+  A(ℓ) = D(ℓ) + U(ℓ) A(ℓ−1) U(ℓ)ᵀ          (telescoping form)
+  A(ℓ)⁻¹ = G(ℓ) + E(ℓ) (A(ℓ−1) + D̂(ℓ))⁻¹ E(ℓ)ᵀ      with
+  D̂ = (Uᵀ D⁻¹ U)⁻¹,   E = D⁻¹ U D̂,   G = D⁻¹ − D⁻¹ U D̂ Uᵀ D⁻¹
+
+(the identity is verified in tests/test_factorization.py against dense
+inversion).  At each level the reduced diagonal blocks are assembled from
+the children D̂ and the sibling couplings B; the root system is solved dense.
+
+Leaf diagonal blocks of K̃+βI are SPD (Gaussian kernel + positive shift), so
+leaves use Cholesky; reduced levels use LU for robustness (the compression
+error can perturb definiteness of the small reduced blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from repro.core.hss import HSSMatrix
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HSSFactorization:
+    """Factor-once / solve-many artifact for K̃ + beta I."""
+
+    e_leaf: Array               # (n_leaf, m, r0)
+    g_leaf: Array               # (n_leaf, m, m)
+    e_lvls: tuple[Array, ...]   # per k=1..K-1: (n_k, 2 r_{k-1}, r_k)
+    g_lvls: tuple[Array, ...]   # per k=1..K-1: (n_k, 2 r_{k-1}, 2 r_{k-1})
+    root_lu: Array              # (2 r_{K-1}, 2 r_{K-1})
+    root_piv: Array
+    levels: int = dataclasses.field(metadata=dict(static=True))
+    leaf_size: int = dataclasses.field(metadata=dict(static=True))
+    beta: float = dataclasses.field(metadata=dict(static=True))
+
+    def solve(self, b: Array) -> Array:
+        return hss_solve(self, b)
+
+    def solve_mat(self, b: Array) -> Array:
+        """Solve for multiple RHS, b of shape (N, c)."""
+        return jax.vmap(self.solve, in_axes=1, out_axes=1)(b)
+
+
+def _leaf_factors(d_shift: Array, u: Array) -> tuple[Array, Array, Array]:
+    """Batched leaf EGD̂ from Cholesky of the shifted diagonal blocks."""
+
+    def one(d_i: Array, u_i: Array):
+        m = d_i.shape[0]
+        chol = jsl.cholesky(d_i, lower=True)
+        dinv_u = jsl.cho_solve((chol, True), u_i)             # (m, r)
+        s_hat = u_i.T @ dinv_u                                # (r, r)
+        d_hat = jnp.linalg.inv(s_hat)
+        e_i = dinv_u @ d_hat                                  # (m, r)
+        dinv = jsl.cho_solve((chol, True), jnp.eye(m, dtype=d_i.dtype))
+        g_i = dinv - e_i @ dinv_u.T
+        return e_i, g_i, d_hat
+
+    return jax.vmap(one)(d_shift, u)
+
+
+def _level_factors(d_blk: Array, u: Array) -> tuple[Array, Array, Array]:
+    """Batched reduced-level EGD̂ via LU of the (2r x 2r) assembled blocks."""
+
+    def one(d_i: Array, u_i: Array):
+        c = d_i.shape[0]
+        lu, piv = jsl.lu_factor(d_i)
+        dinv_u = jsl.lu_solve((lu, piv), u_i)
+        s_hat = u_i.T @ dinv_u
+        d_hat = jnp.linalg.inv(s_hat)
+        e_i = dinv_u @ d_hat
+        dinv = jsl.lu_solve((lu, piv), jnp.eye(c, dtype=d_i.dtype))
+        g_i = dinv - e_i @ dinv_u.T
+        return e_i, g_i, d_hat
+
+    return jax.vmap(one)(d_blk, u)
+
+
+def _assemble_next(d_hat: Array, b: Array) -> Array:
+    """Pair children D̂ with their sibling coupling into parent blocks.
+
+    d_hat (n_{k-1}, r, r), b (n_k, r, r)  ->  (n_k, 2r, 2r) blocks
+    [[D̂_c1, B], [Bᵀ, D̂_c2]].
+    """
+    n_k, r = b.shape[0], b.shape[1]
+    pair = d_hat.reshape(n_k, 2, r, r)
+    top = jnp.concatenate([pair[:, 0], b], axis=-1)
+    bot = jnp.concatenate([jnp.swapaxes(b, -1, -2), pair[:, 1]], axis=-1)
+    return jnp.concatenate([top, bot], axis=-2)
+
+
+def factorize(hss: HSSMatrix, beta: float,
+              store_dtype: str | None = None) -> HSSFactorization:
+    """Factor K̃ + beta*I.  Reused for every ADMM iteration and C value.
+
+    ``store_dtype="bfloat16"`` stores the E/G factors in bf16 (the solve
+    accumulates in f32) — halves the solve's HBM traffic, the dominant
+    roofline term of the distributed ADMM step (§Perf change D1).  The
+    root LU stays f32.
+    """
+    K, m = hss.levels, hss.leaf_size
+    dtype = hss.d_leaf.dtype
+    eye = jnp.eye(m, dtype=dtype)
+    d_shift = hss.d_leaf + beta * eye
+
+    if K == 0:
+        # Degenerate single-block problem: dense Cholesky path.
+        chol = jsl.cholesky(d_shift[0], lower=True)
+        return HSSFactorization(
+            e_leaf=jnp.zeros((1, m, 0), dtype),
+            g_leaf=jnp.zeros((1, m, m), dtype),
+            e_lvls=(), g_lvls=(),
+            root_lu=chol, root_piv=jnp.arange(m, dtype=jnp.int32),
+            levels=0, leaf_size=m, beta=beta,
+        )
+
+    e_leaf, g_leaf, d_hat = _leaf_factors(d_shift, hss.u_leaf)
+    e_lvls: list[Array] = []
+    g_lvls: list[Array] = []
+    for k in range(1, K):
+        d_blk = _assemble_next(d_hat, hss.b_mats[k - 1])
+        e_k, g_k, d_hat = _level_factors(d_blk, hss.transfers[k - 1])
+        e_lvls.append(e_k)
+        g_lvls.append(g_k)
+    root = _assemble_next(d_hat, hss.b_mats[K - 1])[0]
+    lu, piv = jsl.lu_factor(root)
+    if store_dtype is not None:
+        sd = jnp.dtype(store_dtype)
+        e_leaf, g_leaf = e_leaf.astype(sd), g_leaf.astype(sd)
+        e_lvls = [a.astype(sd) for a in e_lvls]
+        g_lvls = [a.astype(sd) for a in g_lvls]
+    return HSSFactorization(
+        e_leaf=e_leaf, g_leaf=g_leaf,
+        e_lvls=tuple(e_lvls), g_lvls=tuple(g_lvls),
+        root_lu=lu, root_piv=piv,
+        levels=K, leaf_size=m, beta=beta,
+    )
+
+
+def hss_solve(fac: HSSFactorization, b: Array) -> Array:
+    """x = (K̃ + beta I)^{-1} b in O(N r): one upward + one downward sweep."""
+    K, m = fac.levels, fac.leaf_size
+    if K == 0:
+        return jsl.cho_solve((fac.root_lu, True), b)
+
+    n_leaf = fac.e_leaf.shape[0]
+    b0 = b.reshape(n_leaf, m)
+    # Upward sweep: project the RHS through Eᵀ level by level.
+    bs = [b0]
+    bt = jnp.einsum("nmr,nm->nr", fac.e_leaf, b0)
+    for k in range(1, K):
+        b_k = bt.reshape(fac.e_lvls[k - 1].shape[0], -1)   # (n_k, 2 r_{k-1})
+        bs.append(b_k)
+        bt = jnp.einsum("ncr,nc->nr", fac.e_lvls[k - 1], b_k)
+    b_root = bt.reshape(-1)
+    # root stays f32 regardless of the factor storage dtype
+    x_root = jsl.lu_solve(
+        (fac.root_lu, fac.root_piv), b_root.astype(fac.root_lu.dtype)
+    ).astype(bt.dtype)
+
+    # Downward sweep: x_k = G_k b_k + E_k xi_k.
+    xi = x_root.reshape(2, -1)                              # level K-1 nodes
+    for k in range(K - 1, 0, -1):
+        b_k = bs[k]
+        x_k = (
+            jnp.einsum("ncd,nd->nc", fac.g_lvls[k - 1], b_k)
+            + jnp.einsum("ncr,nr->nc", fac.e_lvls[k - 1], xi)
+        )
+        xi = x_k.reshape(-1, x_k.shape[-1] // 2)            # children skeleton
+    x0 = (
+        jnp.einsum("nab,nb->na", fac.g_leaf, b0)
+        + jnp.einsum("nmr,nr->nm", fac.e_leaf, xi)
+    )
+    return x0.reshape(-1)

@@ -1,0 +1,153 @@
+"""Hierarchically Semi-Separable matrix container + telescoping apply.
+
+Skeleton (interpolative) form, symmetric kernel case (paper §3.1, following
+Chávez et al. "HSS-ANN"):
+
+  - leaf diagonal blocks D_i = K(X_i, X_i)                       (dense, exact)
+  - leaf bases U_i (m, r0): interpolation onto r0 skeleton points per leaf,
+    U_i[skel rows] = I
+  - per internal level k: transfer matrices P (2 r_{k-1}, r_k) stacking the
+    children transfers [R_c1; R_c2], and skeleton indices (global point ids)
+  - sibling couplings B at level k: B_p = K(X[skel_c1], X[skel_c2])
+    — *pure kernel evaluations between skeleton points*, which is what makes
+    the construction partially matrix-free (no dense off-diagonal block is
+    ever formed at any level).
+
+Level indexing: k = 0 are the leaves, k = K = tree.levels is the root.
+Level k has n_k = 2**(K-k) nodes. Arrays are stacked over nodes per level so
+every HSS operation is a batch of small dense ops (vmapped → MXU-friendly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HSSMatrix:
+    """Symmetric HSS approximation of a kernel matrix over permuted points."""
+
+    x: Array           # (N, f)  permuted data points (needed for predict/bias)
+    d_leaf: Array      # (n_leaf, m, m)
+    u_leaf: Array      # (n_leaf, m, r0)
+    skel_leaf: Array   # (n_leaf, r0) int32 — global permuted-space indices
+    # tuple over k = 1..K-1 (empty when K <= 1):
+    transfers: tuple[Array, ...]   # (n_k, 2*r_{k-1}, r_k)
+    skels: tuple[Array, ...]       # (n_k, r_k) int32
+    # tuple over k = 1..K: sibling couplings, (n_k, r_{k-1}, r_{k-1})
+    b_mats: tuple[Array, ...]
+    levels: int = dataclasses.field(metadata=dict(static=True))
+    leaf_size: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n(self) -> int:
+        return self.d_leaf.shape[0] * self.leaf_size
+
+    @property
+    def n_leaves(self) -> int:
+        return self.d_leaf.shape[0]
+
+    @property
+    def ranks(self) -> list[int]:
+        r = [self.u_leaf.shape[-1]]
+        for t in self.transfers:
+            r.append(t.shape[-1])
+        return r
+
+    def shifted(self, beta: float) -> "HSSMatrix":
+        """K̃ + beta I (shift lives on the leaf diagonal blocks only)."""
+        m = self.leaf_size
+        eye = jnp.eye(m, dtype=self.d_leaf.dtype)
+        return dataclasses.replace(self, d_leaf=self.d_leaf + beta * eye)
+
+    # ------------------------------------------------------------------ #
+    # telescoping matvec                                                 #
+    # ------------------------------------------------------------------ #
+    def matvec(self, v: Array) -> Array:
+        """K̃ @ v in O(N r) — upward sweep, sibling coupling, downward sweep."""
+        K = self.levels
+        n_leaf, m = self.n_leaves, self.leaf_size
+        vl = v.reshape(n_leaf, m)
+        diag = jnp.einsum("nab,nb->na", self.d_leaf, vl)
+        if K == 0:
+            return diag.reshape(-1)
+
+        # Upward: project into skeleton coordinates at every level.
+        vt = [jnp.einsum("nmr,nm->nr", self.u_leaf, vl)]  # level 0: (n_leaf, r0)
+        for k in range(1, K):
+            t = self.transfers[k - 1]                       # (n_k, 2 r_{k-1}, r_k)
+            prev = vt[-1].reshape(t.shape[0], t.shape[1])   # pair children
+            vt.append(jnp.einsum("ncr,nc->nr", t, prev))
+
+        # Downward: accumulate incoming far-field per node, top level first.
+        w = None
+        for k in range(K, 0, -1):
+            b = self.b_mats[k - 1]                          # (n_k, r_{k-1}, r_{k-1})
+            pair = vt[k - 1].reshape(b.shape[0], 2, b.shape[1])
+            coup = jnp.stack(
+                [
+                    jnp.einsum("nij,nj->ni", b, pair[:, 1]),
+                    jnp.einsum("nji,nj->ni", b, pair[:, 0]),
+                ],
+                axis=1,
+            )                                               # (n_k, 2, r_{k-1})
+            if w is not None:
+                t = self.transfers[k - 1]
+                down = jnp.einsum("ncr,nr->nc", t, w)       # (n_k, 2 r_{k-1})
+                coup = coup + down.reshape(coup.shape)
+            w = coup.reshape(-1, coup.shape[-1])            # (n_{k-1}, r_{k-1})
+
+        out = diag + jnp.einsum("nmr,nr->nm", self.u_leaf, w)
+        return out.reshape(-1)
+
+    def matmat(self, v: Array) -> Array:
+        """K̃ @ V for V (N, c)."""
+        return jax.vmap(self.matvec, in_axes=1, out_axes=1)(v)
+
+    # ------------------------------------------------------------------ #
+    # dense reconstruction (tests / small problems only)                 #
+    # ------------------------------------------------------------------ #
+    def todense(self) -> Array:
+        K = self.levels
+        n_leaf, m = self.n_leaves, self.leaf_size
+        n = self.n
+        out = jnp.zeros((n, n), self.d_leaf.dtype)
+        for i in range(n_leaf):
+            out = out.at[i * m:(i + 1) * m, i * m:(i + 1) * m].set(self.d_leaf[i])
+        # Expanded bases per level: Ubig[k] maps skeleton coords -> full span.
+        ubig = [self.u_leaf[i] for i in range(n_leaf)]
+        for k in range(1, K + 1):
+            b = self.b_mats[k - 1]
+            n_k = b.shape[0]
+            width = m * 2 ** (k - 1)
+            for p in range(n_k):
+                ua, ub_ = ubig[2 * p], ubig[2 * p + 1]
+                blk = ua @ b[p] @ ub_.T
+                r0 = 2 * p * width
+                c0 = (2 * p + 1) * width
+                out = out.at[r0:r0 + width, c0:c0 + width].set(blk)
+                out = out.at[c0:c0 + width, r0:r0 + width].set(blk.T)
+            if k < K:
+                t = self.transfers[k - 1]
+                nxt = []
+                for p in range(n_k):
+                    rc = t.shape[1] // 2
+                    top = ubig[2 * p] @ t[p, :rc, :]
+                    bot = ubig[2 * p + 1] @ t[p, rc:, :]
+                    nxt.append(jnp.concatenate([top, bot], axis=0))
+                ubig = nxt
+        return out
+
+    def memory_bytes(self) -> int:
+        """Storage of the representation (the paper's 'Memory [MB]' column)."""
+        leaves = [self.d_leaf, self.u_leaf, self.skel_leaf]
+        total = sum(int(a.size) * a.dtype.itemsize for a in leaves)
+        for t in (*self.transfers, *self.skels, *self.b_mats):
+            total += int(t.size) * t.dtype.itemsize
+        return total

@@ -1,0 +1,82 @@
+"""Interpolative decomposition via greedy column-pivoted QR, in JAX.
+
+Selects ``k`` skeleton columns J of M (s, n) and an interpolation matrix
+T (k, n) with  M ≈ M[:, J] @ T  and  T[:, J] = I.
+
+This is the TPU-native stand-in for STRUMPACK's ANN-guided pivot selection:
+the *sampling* (which rows/columns of K we look at) already encodes the data
+geometry (see compression.py); the pivoted QR then extracts the dominant
+skeleton within the sampled block.  The loop is k sequential rank-1 updates
+(k is the HSS rank, small) and is vmapped across all nodes of a tree level.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def cpqr_select(m_mat: Array, k: int) -> tuple[Array, Array]:
+    """Greedy CPQR pivot selection.
+
+    Returns (piv (k,) int32 column indices, qmat (s, k) orthonormal basis of
+    the selected columns' span).  Modified-Gram-Schmidt with explicit
+    re-orthogonalization against previously selected directions.
+    """
+    s, n = m_mat.shape
+    dtype = m_mat.dtype
+
+    def body(i, carry):
+        resid, piv, qs, avail = carry
+        norms = jnp.where(avail, jnp.sum(resid * resid, axis=0), -1.0)
+        p = jnp.argmax(norms).astype(jnp.int32)
+        col = resid[:, p]
+        nrm = jnp.sqrt(jnp.maximum(norms[p], 1e-30))
+        q = col / nrm
+        # "Twice is enough": re-orthogonalize against prior directions.
+        q = q - qs @ (qs.T @ q)
+        q = q / jnp.sqrt(jnp.maximum(q @ q, 1e-30))
+        # Deflate every remaining column.
+        resid = resid - q[:, None] * (q @ resid)[None, :]
+        # Numerical safety: zero the chosen column exactly.
+        resid = resid.at[:, p].set(0.0)
+        piv = piv.at[i].set(p)
+        qs = qs.at[:, i].set(q)
+        avail = avail.at[p].set(False)   # pivots stay distinct even for rank-
+        return resid, piv, qs, avail     # deficient (e.g. all-zero) blocks
+
+    piv0 = jnp.zeros((k,), jnp.int32)
+    qs0 = jnp.zeros((s, k), dtype)
+    avail0 = jnp.ones((n,), bool)
+    _, piv, qs, _ = jax.lax.fori_loop(0, k, body, (m_mat, piv0, qs0, avail0))
+    return piv, qs
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def interp_decomp(m_mat: Array, k: int, ridge: float = 1e-7) -> tuple[Array, Array]:
+    """Column ID:  M ≈ M[:, J] @ T  with  T[:, J] = I_k.
+
+    T solved from ridge-regularized normal equations on the skeleton columns
+    (robust when the numerical rank of M is below k, which happens by design
+    — the HSS rank is a static cap, cf. hss_max_rank in the paper).
+    """
+    piv, _ = cpqr_select(m_mat, k)
+    mj = jnp.take(m_mat, piv, axis=1)  # (s, k)
+    gram = mj.T @ mj
+    # Absolute floor keeps the solve finite for (near-)zero blocks, which
+    # legitimately occur for leaves made of inert padding points.
+    lam = ridge * (jnp.trace(gram) / k) + 1e-10
+    t_full = jnp.linalg.solve(gram + lam * jnp.eye(k, dtype=m_mat.dtype), mj.T @ m_mat)
+    # Enforce exact identity on skeleton columns.
+    t_full = t_full.at[:, piv].set(jnp.eye(k, dtype=m_mat.dtype))
+    return piv, t_full
+
+
+def row_interp_decomp(m_mat: Array, k: int) -> tuple[Array, Array]:
+    """Row ID:  M ≈ P @ M[J, :]  with P (rows, k), P[J, :] = I_k."""
+    piv, t = interp_decomp(m_mat.T, k)
+    return piv, t.T

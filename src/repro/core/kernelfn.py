@@ -1,0 +1,86 @@
+"""Kernel functions evaluated block-wise.
+
+The Gaussian kernel K(x, y) = exp(-||x-y||^2 / (2 h^2)) is the paper's choice
+(Cipolla & Gondzio §3.3).  Block evaluation is the compute hot-spot of both
+HSS compression (sampled blocks) and prediction (test × support blocks); the
+Pallas kernel in ``repro.kernels.gaussian`` implements the tiled TPU version,
+and this module provides the XLA path plus the dispatch switch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """A positive-definite kernel with a single bandwidth-like parameter h."""
+
+    name: str = "gaussian"
+    h: float = 1.0
+    # "xla" | "pallas" | "pallas_interpret" — which block-eval backend to use.
+    impl: str = "xla"
+
+    def with_h(self, h: float) -> "KernelSpec":
+        return dataclasses.replace(self, h=h)
+
+
+def _sqdist(xa: Array, xb: Array) -> Array:
+    """Pairwise squared distances via the matmul expansion (MXU-friendly)."""
+    na = jnp.sum(xa * xa, axis=-1)[:, None]
+    nb = jnp.sum(xb * xb, axis=-1)[None, :]
+    cross = xa @ xb.T
+    return jnp.maximum(na + nb - 2.0 * cross, 0.0)
+
+
+def gaussian_block_xla(xa: Array, xb: Array, h: float) -> Array:
+    """K(xa, xb) for row blocks xa (ma, r), xb (mb, r) -> (ma, mb)."""
+    return jnp.exp(_sqdist(xa, xb) * (-0.5 / (h * h)))
+
+
+def laplacian_block_xla(xa: Array, xb: Array, h: float) -> Array:
+    """exp(-||x-y||_1 / h); an optional PD kernel variant."""
+    d1 = jnp.sum(jnp.abs(xa[:, None, :] - xb[None, :, :]), axis=-1)
+    return jnp.exp(-d1 / h)
+
+
+def kernel_block(spec: KernelSpec, xa: Array, xb: Array) -> Array:
+    """Evaluate a (len(xa), len(xb)) kernel block under ``spec``."""
+    if spec.name == "gaussian":
+        if spec.impl in ("pallas", "pallas_interpret"):
+            # Deferred import: kernels package depends on core being importable.
+            from repro.kernels.gaussian import ops as gops
+
+            return gops.gaussian_block(
+                xa, xb, spec.h, interpret=(spec.impl == "pallas_interpret")
+            )
+        return gaussian_block_xla(xa, xb, spec.h)
+    if spec.name == "laplacian":
+        return laplacian_block_xla(xa, xb, spec.h)
+    raise ValueError(f"unknown kernel {spec.name!r}")
+
+
+def kernel_matvec_streamed(
+    spec: KernelSpec, x_rows: Array, x_cols: Array, v: Array, block: int = 4096
+) -> Array:
+    """(K(x_rows, x_cols) @ v) without materializing the full block.
+
+    Streams over row blocks with ``lax.map`` — O(block * n_cols) live memory.
+    Used by prediction when the support set is large.
+    """
+    n = x_rows.shape[0]
+    pad = (-n) % block
+    xr = jnp.pad(x_rows, ((0, pad), (0, 0)))
+    xr = xr.reshape(-1, block, x_rows.shape[1])
+
+    def body(xblk):
+        return kernel_block(spec, xblk, x_cols) @ v
+
+    out = jax.lax.map(body, xr).reshape(-1)
+    return out[:n]

@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic SVM dataset family + deterministic LM tokens."""

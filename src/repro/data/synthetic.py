@@ -1,0 +1,75 @@
+"""Synthetic SVM dataset family.
+
+Analogues of the paper's Table 1 regimes, with controllable size/geometry:
+  blobs        — separable Gaussian clusters (a8a/a9a-like difficulty knob)
+  circles      — concentric spheres (nonlinear boundary; small-h kernels,
+                 the regime where low-rank Nyström fails and HSS wins)
+  checkerboard — alternating grid (hard, many support vectors, ijcnn1-like)
+  susy_like    — low-dim physics-ish mixture (8-18 features, millions of
+                 rows possible — the paper's largest regime)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def blobs(n: int, n_features: int = 8, sep: float = 2.0, seed: int = 0):
+    r = np.random.default_rng(seed)
+    half = n // 2
+    mu = np.zeros(n_features)
+    mu[0] = sep
+    xa = r.normal(size=(half, n_features)) + mu
+    xb = r.normal(size=(n - half, n_features)) - mu
+    x = np.concatenate([xa, xb]).astype(np.float32)
+    y = np.concatenate([np.ones(half), -np.ones(n - half)]).astype(np.float32)
+    p = r.permutation(n)
+    return x[p], y[p]
+
+
+def circles(n: int, n_features: int = 4, gap: float = 1.0, noise: float = 0.15,
+            seed: int = 0):
+    r = np.random.default_rng(seed)
+    half = n // 2
+    u = r.normal(size=(n, n_features))
+    u /= np.linalg.norm(u, axis=1, keepdims=True)
+    radii = np.concatenate([np.ones(half), np.full(n - half, 1.0 + gap)])
+    x = (u * radii[:, None] + noise * r.normal(size=u.shape)).astype(np.float32)
+    y = np.concatenate([np.ones(half), -np.ones(n - half)]).astype(np.float32)
+    p = r.permutation(n)
+    return x[p], y[p]
+
+
+def checkerboard(n: int, cells: int = 4, n_features: int = 2, seed: int = 0):
+    r = np.random.default_rng(seed)
+    x = r.uniform(0, cells, size=(n, n_features)).astype(np.float32)
+    parity = np.sum(np.floor(x[:, :2]), axis=1) % 2
+    y = (parity * 2 - 1).astype(np.float32)
+    return x, y
+
+
+def susy_like(n: int, n_features: int = 18, seed: int = 0):
+    """Low-dimensional mixture with partially overlapping classes."""
+    r = np.random.default_rng(seed)
+    half = n // 2
+    # signal: correlated features; background: broader, shifted
+    cov = 0.6 * np.eye(n_features) + 0.4
+    la = np.linalg.cholesky(cov)
+    xa = r.normal(size=(half, n_features)) @ la.T
+    xb = 1.4 * r.normal(size=(n - half, n_features)) + 0.8
+    x = np.concatenate([xa, xb]).astype(np.float32)
+    y = np.concatenate([np.ones(half), -np.ones(n - half)]).astype(np.float32)
+    p = r.permutation(n)
+    return x[p], y[p]
+
+
+DATASETS = {
+    "blobs": blobs,
+    "circles": circles,
+    "checkerboard": checkerboard,
+    "susy_like": susy_like,
+}
+
+
+def train_test(name: str, n_train: int, n_test: int, seed: int = 0, **kw):
+    x, y = DATASETS[name](n_train + n_test, seed=seed, **kw)
+    return x[:n_train], y[:n_train], x[n_train:], y[n_train:]

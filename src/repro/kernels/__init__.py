@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each subpackage ships three files:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper with padding/layout handling + XLA fallback
+  ref.py    — pure-jnp oracle used by tests (assert_allclose, interpret=True)
+
+Kernels:
+  gaussian     — tiled Gaussian kernel block evaluation (paper hot-spot:
+                 HSS compression sampling + SVM prediction)
+  admm_update  — fused ADMM z-projection + multiplier update (elementwise)
+  ssd          — Mamba-2 SSD chunk scan (semiseparable matmul — the
+                 paper-adjacent structure, see DESIGN.md §5)
+  attention    — flash-style fused attention (causal / local window /
+                 logit softcap) for the LM substrate
+"""

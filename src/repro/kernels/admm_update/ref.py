@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused ADMM z/mu update (paper Alg. 2 lines 3-4)."""
+import jax
+import jax.numpy as jnp
+
+
+def fused_zmu_update_ref(x, mu, c_vec, beta: float):
+    z = jnp.clip(x - mu / beta, 0.0, c_vec)
+    mu_new = mu - beta * (x - z)
+    return z, mu_new

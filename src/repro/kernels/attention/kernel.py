@@ -1,0 +1,132 @@
+"""Flash-style fused attention, Pallas TPU.
+
+Online-softmax over KV tiles with running (max, sum, acc) VMEM scratch.
+Grid = (B*H, n_q_blocks, n_kv_blocks), kv fastest (TPU grids are sequential,
+so the scratch carries across the kv axis and resets at kv == 0).
+
+Features needed by the assigned architectures:
+  - causal masking (decoder LMs)
+  - local sliding window (gemma-2 alternating local/global layers)
+  - logit softcapping cap*tanh(x/cap) (gemma-2)
+  - GQA: the kv-head index is derived from the q-head index inside the
+    BlockSpec index_map — no jnp.repeat materialization of K/V.
+
+VMEM per step (bq = bk = 256, D = 128, f32): q/k/v tiles 3*128 KiB,
+scores 256 KiB, acc 128 KiB « 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, scale: float, causal: bool, window: int | None,
+                 softcap: float, bq: int, bk: int, n_kv: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, D)
+    k = k_ref[0].astype(jnp.float32)          # (bk, D)
+    v = v_ref[0].astype(jnp.float32)          # (bk, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                  # (bq, bk)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                        # (bq, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)[:, None]
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                     # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)[:, None]
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "bq", "bk", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,   # (B, H, S, D)
+    k: jax.Array,   # (B, Hkv, S, D)
+    v: jax.Array,   # (B, Hkv, S, D)
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float = 0.0,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    n_q, n_kv = s // bq, s // bk
+    grid = (b * h, n_q, n_kv)
+    scale = 1.0 / (d ** 0.5)
+
+    def q_map(i, iq, ik):
+        return (i, iq, 0)
+
+    def kv_map(i, iq, ik):
+        bi = i // h
+        hi = i % h
+        return (bi * hkv + hi // rep, ik, 0)
+
+    qr = q.reshape(b * h, s, d)
+    kr = k.reshape(b * hkv, s, d)
+    vr = v.reshape(b * hkv, s, d)
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, scale=scale, causal=causal, window=window,
+            softcap=softcap, bq=bq, bk=bk, n_kv=n_kv,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d)

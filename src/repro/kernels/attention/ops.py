@@ -1,0 +1,38 @@
+"""Public fused-attention wrapper with XLA fallback.
+
+The XLA fallback is the *chunked online-softmax* implementation from
+repro.models.layers (memory-bounded, differentiable); the Pallas kernel is
+the TPU fast path for forward/inference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.kernel import flash_attention_pallas
+from repro.kernels.attention.ref import attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "interpret", "use_pallas"),
+)
+def fused_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool = True, window: int | None = None, softcap: float = 0.0,
+    interpret: bool = False, use_pallas: bool = True,
+) -> jax.Array:
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    s = q.shape[2]
+    blk = min(256, s)
+    while s % blk:
+        blk //= 2
+    blk = max(blk, 1)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        bq=blk, bk=blk, interpret=interpret,
+    )

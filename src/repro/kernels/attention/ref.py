@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for fused attention (causal / local window / softcap)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,            # (B, H, S, D)
+    k: jax.Array,            # (B, Hkv, S, D)
+    v: jax.Array,            # (B, Hkv, S, D)
+    causal: bool = True,
+    window: int | None = None,   # None = global; w = attend to [i-w+1, i]
+    softcap: float = 0.0,        # 0 = off; else cap*tanh(logits/cap)
+) -> jax.Array:
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)

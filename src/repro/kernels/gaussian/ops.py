@@ -1,0 +1,41 @@
+"""Public wrapper for the Gaussian-kernel Pallas kernel.
+
+Pads rows to the tile size and features to the lane width (128), then crops.
+Padding rows are zero vectors — they produce harmless extra tiles that are
+sliced away (never exp overflow: sq >= 0 always).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gaussian.kernel import gaussian_block_pallas
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("h", "interpret", "bm", "bn"))
+def gaussian_block(
+    xa: jax.Array,
+    xb: jax.Array,
+    h: float,
+    interpret: bool = False,
+    bm: int = 256,
+    bn: int = 256,
+) -> jax.Array:
+    ma, f = xa.shape
+    mb = xb.shape[0]
+    bm_eff = min(bm, max(((ma + 7) // 8) * 8, 8))
+    bn_eff = min(bn, max(((mb + 127) // 128) * 128, 128))
+    ma_p = ((ma + bm_eff - 1) // bm_eff) * bm_eff
+    mb_p = ((mb + bn_eff - 1) // bn_eff) * bn_eff
+    f_p = max(((f + 127) // 128) * 128, 128)
+    out = gaussian_block_pallas(
+        _pad_to(xa, ma_p, f_p), _pad_to(xb, mb_p, f_p), h,
+        bm=bm_eff, bn=bn_eff, interpret=interpret,
+    )
+    return out[:ma, :mb]

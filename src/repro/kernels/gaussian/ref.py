@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the tiled Gaussian kernel block."""
+import jax
+import jax.numpy as jnp
+
+
+def gaussian_block_ref(xa: jax.Array, xb: jax.Array, h: float) -> jax.Array:
+    """K[i,j] = exp(-||xa_i - xb_j||^2 / (2 h^2)), computed naively."""
+    diff = xa[:, None, :] - xb[None, :, :]
+    sq = jnp.sum(diff * diff, axis=-1)
+    return jnp.exp(sq * (-0.5 / (h * h)))

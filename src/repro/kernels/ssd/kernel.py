@@ -1,0 +1,96 @@
+"""Mamba-2 SSD chunk scan, Pallas TPU.
+
+Semiseparable evaluation per (batch*head) sequence: the grid iterates chunks
+in order (TPU grids execute sequentially, last axis fastest) and carries the
+(N, P) state in a VMEM scratch across chunk steps — zero HBM traffic for the
+recurrent state.  Per chunk:
+
+  intra  : ((C Bᵀ) ⊙ decay-mask) (dt ⊙ X)   — dense Q×Q MXU block
+  inter  : (C ⊙ exp(L)) h_in                — rank-N carrier (the
+           "off-diagonal low-rank" of the semiseparable matrix)
+  state  : h_out = exp(L_tot) h_in + (B ⊙ exp(L_tot − L) dt)ᵀ X
+
+All decay exponents are ≤ 0, so every exp() is in (0, 1] — numerically safe
+in f32 without rescaling tricks.
+
+VMEM per step (Q=256, P=64, N=128, f32): x 64 KiB + B/C 2*128 KiB + scores
+256 KiB + state scratch 32 KiB « 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk(a_ref, d_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref,
+               *, chunk: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0, 0]
+    d_scalar = d_ref[0, 0]
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)[:, 0]  # (Q,)
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    la = jnp.cumsum(dt) * a                   # (Q,) inclusive log-decay
+    seg = la[:, None] - la[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    gate = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * gate
+    y = scores @ (x * dt[:, None])
+
+    h = h_ref[...]
+    y = y + (c * jnp.exp(la)[:, None]) @ h + d_scalar * x
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    la_tot = la[-1]
+    carrier = (b * (jnp.exp(la_tot - la) * dt)[:, None]).T @ x
+    h_ref[...] = jnp.exp(la_tot) * h + carrier
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret")
+)
+def ssd_pallas(
+    x: jax.Array,      # (BH, S, P)
+    dt: jax.Array,     # (BH, S, 1)
+    a: jax.Array,      # (BH, 1)  negative per-head decay rates
+    b_mat: jax.Array,  # (BH, S, N)
+    c_mat: jax.Array,  # (BH, S, N)
+    d_vec: jax.Array,  # (BH, 1)  skip-connection scale
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    grid = (bh, s // chunk)
+    return pl.pallas_call(
+        functools.partial(_ssd_chunk, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, c: (i, 0)),             # a
+            pl.BlockSpec((1, 1), lambda i, c: (i, 0)),             # D
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),   # x
+            pl.BlockSpec((1, chunk, 1), lambda i, c: (i, c, 0)),   # dt
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),   # B
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),   # C
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        # (N, P) recurrent state in VMEM, persists across the chunk axis.
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(a, d_vec, x, dt, b_mat, c_mat)

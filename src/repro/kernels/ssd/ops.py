@@ -1,0 +1,40 @@
+"""Public wrapper for the SSD chunk kernel: model layout -> kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.kernels.ssd import ref as ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_pallas"))
+def ssd_forward(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)   positive step sizes (post-softplus)
+    a: jax.Array,      # (H,)        negative decay rates
+    b_mat: jax.Array,  # (B, S, G, N)
+    c_mat: jax.Array,  # (B, S, G, N)
+    d_vec: jax.Array,  # (H,)
+    chunk: int = 128,
+    interpret: bool = False,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Returns y (B, S, H, P). Heads share B/C within each of G groups."""
+    if not use_pallas:
+        return ssd_ref.ssd_batched_ref(x, dt, a, b_mat, c_mat, d_vec,
+                                       chunk=chunk)
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    bh = bsz * h
+    xk = x.transpose(0, 2, 1, 3).reshape(bh, s, p)
+    dtk = dt.transpose(0, 2, 1).reshape(bh, s, 1)
+    bk = jnp.repeat(b_mat.transpose(0, 2, 1, 3), rep, axis=1).reshape(bh, s, n)
+    ck = jnp.repeat(c_mat.transpose(0, 2, 1, 3), rep, axis=1).reshape(bh, s, n)
+    ak = jnp.tile(a, bsz).reshape(bh, 1)
+    dk = jnp.tile(d_vec, bsz).reshape(bh, 1)
+    y = ssd_pallas(xk, dtk, ak, bk, ck, dk, chunk=chunk, interpret=interpret)
+    return y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for the Mamba-2 SSD (state-space dual) layer.
+
+Two references:
+  ssd_scan_ref    — the exact sequential recurrence (ground truth):
+                      h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_tᵀ
+                      y_t = C_t h_t + D x_t
+  ssd_chunked_ref — the chunked semiseparable evaluation (dense intra-chunk
+                    block + low-rank inter-chunk state passing).  This is the
+                    SAME hierarchical split the paper applies to kernel
+                    matrices (diag blocks dense, off-diag through a low-rank
+                    carrier) specialized to 1-semiseparable structure
+                    (DESIGN.md §5); it is what the Pallas kernel implements.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, a, b_mat, c_mat, d_scalar):
+    """x (S,P), dt (S,), a scalar<0, b_mat/c_mat (S,N), d_scalar scalar.
+
+    Returns (y (S,P), h_final (N,P)).
+    """
+    s, p = x.shape
+    n = b_mat.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        h = jnp.exp(dt_t * a) * h + dt_t * b_t[:, None] * x_t[None, :]
+        y_t = (c_t.astype(jnp.float32) @ h
+               + d_scalar * x_t.astype(jnp.float32))
+        return h, y_t
+
+    # recurrent state in f32 regardless of operand dtype (bf16 operands are
+    # fine for the matmuls; the state accumulates — §Perf change C1)
+    h0 = jnp.zeros((n, p), jnp.float32)
+    h_fin, y = jax.lax.scan(step, h0, (x, dt, b_mat, c_mat))
+    return y, h_fin
+
+
+def ssd_chunked_ref(x, dt, a, b_mat, c_mat, d_scalar, chunk: int = 16):
+    """Chunked evaluation — must match ssd_scan_ref to fp tolerance."""
+    s, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+
+    xc = x.reshape(nc, chunk, p)
+    dtc = dt.reshape(nc, chunk)
+    bc = b_mat.reshape(nc, chunk, n)
+    cc = c_mat.reshape(nc, chunk, n)
+
+    def chunk_step(h, inp):
+        xq, dtq, bq, cq = inp
+        dtq = dtq.astype(jnp.float32)
+        la = jnp.cumsum(dtq) * a                   # inclusive log decay (Q,)
+        seg = la[:, None] - la[None, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        gate = jnp.where(mask, jnp.exp(seg), 0.0)
+        scores = jnp.dot(cq, bq.T,
+                         preferred_element_type=jnp.float32) * gate
+        y_intra = scores @ (xq.astype(jnp.float32) * dtq[:, None])
+        y_state = (cq.astype(jnp.float32) * jnp.exp(la)[:, None]) @ h
+        la_tot = la[-1]
+        h_new = jnp.exp(la_tot) * h + (
+            bq.astype(jnp.float32) * (jnp.exp(la_tot - la) * dtq)[:, None]
+        ).T @ xq.astype(jnp.float32)
+        y = y_intra + y_state + d_scalar * xq.astype(jnp.float32)
+        return h_new, y
+
+    h0 = jnp.zeros((n, p), jnp.float32)
+    h_fin, yc = jax.lax.scan(chunk_step, h0, (xc, dtc, bc, cc))
+    return yc.reshape(s, p), h_fin
+
+
+def ssd_batched_ref(x, dt, a, b_mat, c_mat, d_vec, chunk: int = 16):
+    """Batched-over-(B,H) chunked reference (fully vmapped — no unrolling).
+
+    x (B,S,H,P), dt (B,S,H), a (H,), b_mat/c_mat (B,S,G,N) with G groups
+    (heads share B/C within a group), d_vec (H,). Returns y (B,S,H,P).
+    """
+    bsz, s, h, p = x.shape
+    g = b_mat.shape[2]
+    rep = h // g
+    b_full = jnp.repeat(b_mat, rep, axis=2)   # (B,S,H,N)
+    c_full = jnp.repeat(c_mat, rep, axis=2)
+
+    def one(xh, dth, ah, bh, ch, dh):
+        y, _ = ssd_chunked_ref(xh, dth, ah, bh, ch, dh, chunk=chunk)
+        return y
+
+    per_head = jax.vmap(one, in_axes=(1, 1, 0, 1, 1, 0), out_axes=1)
+    per_batch = jax.vmap(per_head, in_axes=(0, 0, None, 0, 0, None))
+    return per_batch(x, dt, a, b_full, c_full, d_vec)
+
+
+def ssd_batched_with_state(x, dt, a, b_mat, c_mat, d_vec, chunk: int = 16):
+    """Like ssd_batched_ref but also returns final states (B,H,N,P)."""
+    h = x.shape[2]
+    g = b_mat.shape[2]
+    rep = h // g
+    b_full = jnp.repeat(b_mat, rep, axis=2)
+    c_full = jnp.repeat(c_mat, rep, axis=2)
+
+    def one(xh, dth, ah, bh, ch, dh):
+        return ssd_chunked_ref(xh, dth, ah, bh, ch, dh, chunk=chunk)
+
+    per_head = jax.vmap(one, in_axes=(1, 1, 0, 1, 1, 0), out_axes=(1, 0))
+    per_batch = jax.vmap(per_head, in_axes=(0, 0, None, 0, 0, None))
+    return per_batch(x, dt, a, b_full, c_full, d_vec)

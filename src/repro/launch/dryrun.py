@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch svm-hss-admm --shape admm_grid
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results.jsonl
+
+Per cell it records compiled.memory_analysis() (proves the memory plan),
+cost_analysis() FLOPs/bytes, and the collective schedule parsed from the
+optimized HLO — the inputs to EXPERIMENTS.md §Roofline.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import get_config, list_archs
+from repro.configs.shapes import SHAPES, cell_status
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as ra
+
+SVM_ARCH = "svm-hss-admm"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, fsdp: bool = True,
+             overrides: dict | None = None,
+             step_kwargs: dict | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    rec = dict(arch=arch, shape=shape_name,
+               mesh="2x16x16" if multi_pod else "16x16", n_devices=n_dev,
+               fsdp=fsdp)
+    if overrides:
+        rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+    t0 = time.time()
+
+    from repro.dist.api import use_mesh
+
+    if arch == SVM_ARCH:
+        from repro.core.distributed import build_svm_cell
+
+        fn, shapes, in_sh = build_svm_cell(mesh)
+        with use_mesh(mesh), mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*shapes)
+            compiled = lowered.compile()
+        cfg = None
+    else:
+        from repro.launch.specs import build_cell
+
+        cfg = get_config(arch, **(overrides or {}))
+        shape = SHAPES[shape_name]
+        ok, why = cell_status(cfg, shape)
+        if not ok:
+            rec.update(status="skipped", reason=why)
+            return rec
+        if step_kwargs:
+            rec["step_kwargs"] = {k: str(v) for k, v in step_kwargs.items()}
+        with use_mesh(mesh), mesh:
+            cell = build_cell(cfg, shape, mesh, fsdp=fsdp,
+                              step_kwargs=step_kwargs)
+            # decode: donate the cache so in-place KV/state updates alias
+            # their input buffers instead of copying (§Perf change B2)
+            donate = (1,) if cell.kind == "decode" else ()
+            lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                              donate_argnums=donate
+                              ).lower(*cell.arg_shapes)
+            compiled = lowered.compile()
+        rec["kind"] = cell.kind
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # Loop-corrected totals (cost_analysis counts while bodies once —
+    # verified in tests/test_roofline.py); raw values kept for reference.
+    from repro.roofline import hlo_cost
+
+    corrected = hlo_cost.analyze(hlo)
+    coll = dict(
+        operand_bytes=corrected["collective_bytes"],
+        ring_bytes=corrected["collective_ring_bytes"],
+        per_op=corrected["collective_per_op"],
+        n_collectives=corrected["n_collectives"],
+    )
+    roof = ra.roofline_report(
+        dict(flops=corrected["flops"], **{"bytes accessed": corrected["bytes"]}),
+        coll)
+    roof["raw_cost_analysis_flops"] = float(cost.get("flops", 0.0) or 0.0)
+    roof["loop_multipliers"] = corrected["computation_multipliers"]
+
+    # Pallas-kernel projection: the XLA fallback attention/SSD chunk loops
+    # stream every softmax/gate block through HBM; the validated Pallas
+    # kernels (kernels/attention, kernels/ssd) keep them in VMEM.  Replace
+    # the inner-loop bucket with the kernels' true IO to get the TPU-target
+    # memory term (EXPERIMENTS.md §Perf).
+    if cfg is not None:
+        n_layers = cfg.n_layers
+        inner = sum(v for k, v in corrected["bytes_by_mult"].items()
+                    if k > n_layers)
+        shape = SHAPES[shape_name]
+        passes = 3.5 if shape.kind == "train" else 1.0
+        b_, s_ = shape.global_batch, shape.seq_len
+        io = 0.0
+        if shape.kind == "decode":
+            # one token: the unavoidable IO is one KV-cache read per layer
+            io = n_layers * b_ * s_ * 2 * cfg.n_kv_heads * cfg.head_dim * 2
+        else:
+            if cfg.family in ("dense", "moe", "encoder", "vlm", "hybrid"):
+                io += (passes * n_layers * b_ * s_ *
+                       (2 * cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim
+                       * 2)
+            if cfg.family in ("ssm", "hybrid"):
+                io += (passes * n_layers * b_ * s_ *
+                       (2 * cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state)
+                       * 4)
+        io_per_dev = io / n_dev
+        proj_bytes = roof["bytes_per_device"] - inner + io_per_dev
+        roof["t_memory_projected_pallas_s"] = proj_bytes / ra.HW().hbm_bw
+        roof["inner_loop_bytes"] = inner
+        roof["projected_kernel_io_bytes"] = io_per_dev
+    rec.update(
+        status="ok",
+        compile_s=round(time.time() - t0, 1),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            code_bytes=mem.generated_code_size_in_bytes,
+            total_per_device=(mem.argument_size_in_bytes
+                              + mem.output_size_in_bytes
+                              + mem.temp_size_in_bytes),
+        ),
+        collectives=coll,
+        roofline=roof,
+    )
+    if cfg is not None and shape_name in SHAPES:
+        shape = SHAPES[shape_name]
+        if shape.kind == "train":
+            mf = ra.model_flops_train(cfg, shape)
+            rec["model_flops_global"] = mf
+            hlo_global = roof["flops_per_device"] * n_dev
+            rec["model_vs_hlo_flops"] = mf / hlo_global if hlo_global else 0.0
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (int/float/str)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-dtype", default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+        cells.append((SVM_ARCH, "admm_grid"))
+    else:
+        cells.append((args.arch, args.shape))
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    step_kwargs = {}
+    if args.microbatches > 1:
+        step_kwargs["num_microbatches"] = args.microbatches
+    if args.grad_dtype:
+        step_kwargs["grad_dtype"] = args.grad_dtype
+
+    out_f = open(args.out, "a") if args.out else None
+    n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch, shape, mp, fsdp=not args.no_fsdp,
+                               overrides=overrides or None,
+                               step_kwargs=step_kwargs or None)
+            except Exception as e:   # noqa: BLE001 — record and continue
+                rec = dict(arch=arch, shape=shape,
+                           mesh="2x16x16" if mp else "16x16",
+                           status="error", error=f"{type(e).__name__}: {e}",
+                           trace=traceback.format_exc()[-2000:])
+                n_fail += 1
+            line = json.dumps(rec)
+            print(line, flush=True)
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+    if out_f:
+        out_f.close()
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (data=16, model=16) = 256 chips
+(TPU v5e pod).  Multi-pod: (pod=2, data=16, model=16) = 512 chips; the
+"pod" axis composes with "data" for batch/FSDP sharding (DCI collectives),
+"model" stays intra-pod (ICI).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for CI tests (requires >= n_data*n_model local devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,93 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation anywhere: params/optimizer/cache shapes come from
+``jax.eval_shape`` over the real constructors, inputs are explicit
+ShapeDtypeStructs.  Shardings are produced by repro.dist.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+from repro.train import optim
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    """A lowered-able unit: fn(*args) with shardings aligned to args."""
+    fn: Callable
+    arg_shapes: tuple
+    in_shardings: tuple
+    kind: str           # train | prefill | decode
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.frontend == "audio_stub":
+        return {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                           jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+            "mask_indices": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+        }
+    if cfg.frontend == "vision_stub":
+        s_txt = s - cfg.n_prefix_tokens
+        return {
+            "patches": jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix_tokens, cfg.frontend_dim), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, s_txt), i32),
+            "labels": jax.ShapeDtypeStruct((b, s_txt), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        "labels": jax.ShapeDtypeStruct((b, s), i32),
+    }
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, fsdp: bool = True,
+               step_kwargs: dict | None = None) -> Cell:
+    from repro.dist import sharding as shd
+
+    model = Model(cfg)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_sh = shd.param_shardings(params_shapes, mesh, fsdp=fsdp)
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(optim.adamw_init, params_shapes)
+        opt_sh = shd.opt_shardings(opt_shapes, params_sh, mesh)
+        batch = batch_specs(cfg, shape)
+        batch_sh = shd.batch_shardings(batch, mesh)
+        step = make_train_step(model, **(step_kwargs or {}))
+        return Cell(step, (params_shapes, opt_shapes, batch),
+                    (params_sh, opt_sh, batch_sh), "train")
+
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape)
+        batch.pop("labels", None)
+        batch.pop("mask_indices", None)
+        batch_sh = shd.batch_shardings(batch, mesh)
+        if cfg.family == "encoder":
+            # encoder "prefill" = full forward (DESIGN.md §5)
+            fn = model.forward_logits
+        else:
+            fn = lambda params, b: model.prefill(params, b, shape.seq_len)
+        return Cell(fn, (params_shapes, batch), (params_sh, batch_sh),
+                    "prefill")
+
+    # decode: one new token against a cache of seq_len
+    b = shape.global_batch
+    cache_shapes = jax.eval_shape(
+        lambda: Model(cfg).cache_init(b, shape.seq_len))
+    cache_sh = shd.cache_shardings(cache_shapes, mesh, batch=b)
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tokens_sh = shd.batch_shardings(tokens, mesh)
+    return Cell(model.decode_step, (params_shapes, cache_shapes, tokens),
+                (params_sh, cache_sh, tokens_sh), "decode")

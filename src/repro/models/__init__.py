@@ -1,0 +1,6 @@
+"""LM substrate for the assigned architecture pool (DESIGN.md §5)."""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+
+__all__ = ["ModelConfig", "Model"]

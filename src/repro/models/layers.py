@@ -1,0 +1,482 @@
+"""Transformer building blocks: norms, RoPE, chunked attention, MLP, MoE.
+
+Everything is a pure function over explicit parameter pytrees (stacked over
+layers by the caller and scanned — see transformer.py).  Activation-sharding
+constraints are injected through repro.dist.api.constrain (no-op outside a
+mesh context), so the same code serves single-device smoke tests and the
+512-chip dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import constrain
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------- #
+# norms / embeddings / rope                                             #
+# --------------------------------------------------------------------- #
+def rms_norm(x: Array, gain: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return ((x32 * scale) * (1.0 + gain.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (..., S, n_heads, head_dim), positions (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# attention                                                             #
+# --------------------------------------------------------------------- #
+class AttnParams(NamedTuple):
+    wq: Array   # (d, H*hd)
+    wk: Array   # (d, KV*hd)
+    wv: Array   # (d, KV*hd)
+    wo: Array   # (H*hd, d)
+
+
+def _block_mask(qpos: Array, kpos: Array, causal: bool, window: Array | int,
+                prefix_len: Array | int) -> Array:
+    """(bq, bk) mask; window <= 0 means global; prefix positions always visible."""
+    q = qpos[:, None]
+    k = kpos[None, :]
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= (q >= k) | (k < prefix_len)
+    w = jnp.asarray(window)
+    m &= (w <= 0) | ((q - k) < w) | (k < prefix_len)
+    return m
+
+
+def chunked_attention(
+    q: Array, k: Array, v: Array,
+    *, causal: bool, window: Array | int = 0, softcap: float = 0.0,
+    prefix_len: Array | int = 0, chunk_q: int = 512, chunk_kv: int = 1024,
+    q_offset: Array | int = 0,
+) -> Array:
+    """Memory-bounded online-softmax attention (Rabe–Staats), pure XLA.
+
+    q (B, S, H, D); k, v (B, Skv, KV, D).  GQA by head-group reshape — no
+    K/V repetition is materialized.  This is the differentiable/dry-run path;
+    repro.kernels.attention is the TPU fast path with identical semantics.
+    """
+    b, s, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = 1.0 / (d ** 0.5)
+
+    cq = min(chunk_q, s)
+    while s % cq:
+        cq -= 1
+    ck = min(chunk_kv, skv)
+    while skv % ck:
+        ck -= 1
+    nq, nk = s // cq, skv // ck
+
+    qr = q.reshape(b, nq, cq, kvh, rep, d)
+    kr = k.reshape(b, nk, ck, kvh, d)
+    vr = v.reshape(b, nk, ck, kvh, d)
+
+    def q_block(iq, q_blk):
+        qpos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            ik, k_blk, v_blk = inp
+            kpos = ik * ck + jnp.arange(ck)
+            logits = jnp.einsum(
+                "bckrd,bzkd->bkrcz", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale                                   # (b,kv,rep,cq,ck)
+            if softcap > 0:
+                logits = softcap * jnp.tanh(logits / softcap)
+            mask = _block_mask(qpos, kpos, causal, window, prefix_len)
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_cur = jnp.max(logits, axis=-1)
+            m_new = jnp.maximum(m_run, m_cur)
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            # NOTE (§Perf change A3, REFUTED): casting p to bf16 before the
+            # PV matmul was predicted to halve block traffic but MEASURED
+            # +8% memory — the cast materializes an extra pass over the f32
+            # block instead of fusing.  Kept in f32; on real TPU the Pallas
+            # flash kernel supersedes this whole path.
+            upd = jnp.einsum("bkrcz,bzkd->bkrcd", p,
+                             v_blk.astype(jnp.float32))
+            acc = acc * alpha[..., None] + upd
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kvh, rep, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, rep, cq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, rep, cq, d), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)),
+        )
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out.astype(q.dtype)                      # (b,kv,rep,cq,d)
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    # (nq, b, kv, rep, cq, d) -> (b, s, h, d)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 2, 3, 1, 4, 5)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def _attention_sharded(q, k, v, cfg, layer_window, prefix_len):
+    """Head-parallel attention under shard_map: H on "model", B on "data".
+
+    Inside the map every device runs plain chunked attention on ITS heads
+    with the full (replicated-over-model) K/V — ZERO collectives inside the
+    chunk loops.  Without this, the SPMD partitioner re-gathers K/V blocks
+    on every (q-chunk, kv-chunk) iteration (measured 4.3 TB/step on the
+    llama3-405b train cell — §Perf change A2).
+    """
+    from repro.dist import api as dist_api
+    from jax.sharding import PartitionSpec as P
+
+    ctx = dist_api._current()
+    mesh, tr = ctx
+    model_ax = tr.get("model")
+    data_ax = tr.get("data")
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    mp = mesh.shape[model_ax] if model_ax else 1
+    if mp == 1 or h % mp:
+        return None     # fall back to the pjit-auto path
+    h_loc = h // mp
+    group = h // kvh                    # q heads per kv head
+    kv_loc = max(1, h_loc // group)
+    # each device's q heads must map to a CONTIGUOUS kv-head range
+    if h_loc % kv_loc or not (group % h_loc == 0 or h_loc % group == 0):
+        return None
+    dspec = dist_api.resolve_spec(("data",), (b,))[0]
+
+    def local(q_l, k_l, v_l, win, plen):
+        # slice the kv heads this device's q heads attend to
+        midx = jax.lax.axis_index(model_ax)
+        start = (midx * h_loc * kvh) // h
+        k_s = jax.lax.dynamic_slice_in_dim(k_l, start, kv_loc, axis=2)
+        v_s = jax.lax.dynamic_slice_in_dim(v_l, start, kv_loc, axis=2)
+        return chunked_attention(
+            q_l, k_s, v_s, causal=cfg.causal, window=win,
+            softcap=cfg.attn_softcap, prefix_len=plen,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dspec, None, model_ax, None),
+                  P(dspec, None, None, None),
+                  P(dspec, None, None, None), P(), P()),
+        out_specs=P(dspec, None, model_ax, None),
+        check_vma=False,
+    )(q, k, v, jnp.asarray(layer_window), jnp.asarray(prefix_len))
+
+
+def attention_block(
+    x: Array, p: AttnParams, positions: Array, cfg, layer_window: Array | int,
+    prefix_len: Array | int = 0,
+) -> Array:
+    """Full attention sub-block: proj -> rope -> attention -> out proj."""
+    from repro.dist import api as dist_api
+
+    b, s, d_model = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p.wq).reshape(b, s, h, hd)
+    k = (x @ p.wk).reshape(b, s, kv, hd)
+    v = (x @ p.wv).reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = None
+    if cfg.use_pallas:
+        from repro.kernels.attention import ops as attn_ops
+        out = attn_ops.fused_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=cfg.causal,
+            window=None, softcap=cfg.attn_softcap, interpret=True,
+        ).transpose(0, 2, 1, 3)
+    elif dist_api._current() is not None:
+        out = _attention_sharded(q, k, v, cfg, layer_window, prefix_len)
+    if out is None:
+        q = constrain(q, ("data", None, "model", None))
+        k = constrain(k, ("data", None, "model", None))
+        out = chunked_attention(
+            q, k, v, causal=cfg.causal, window=layer_window,
+            softcap=cfg.attn_softcap, prefix_len=prefix_len,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        )
+    out = out.reshape(b, s, h * hd)
+    return constrain(out @ p.wo, ("data", None, None))
+
+
+def decode_attention(
+    q: Array, k_cache: Array, v_cache: Array, cur_len: Array,
+    *, softcap: float = 0.0, window: Array | int = 0,
+) -> Array:
+    """Single-token decode: q (B, 1, H, D) vs cache (B, Smax, KV, D).
+
+    Positions >= cur_len are masked.  The contraction over the cache length
+    axis is sharding-friendly: when Smax is sharded (long_500k SP decode) XLA
+    turns the softmax/reduction into the split-K flash-decoding pattern.
+    """
+    b, _, h, d = q.shape
+    smax, kvh = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kvh
+    qr = q.reshape(b, kvh, rep, d)
+    logits = jnp.einsum("bkrd,bskd->bkrs", qr.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / (d ** 0.5)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(smax)
+    valid = pos[None, :] < cur_len[:, None]              # (B, Smax)
+    w = jnp.asarray(window)
+    in_window = (w <= 0) | ((cur_len[:, None] - 1 - pos[None, :]) < w)
+    mask = (valid & in_window)[:, None, None, :]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrs,bskd->bkrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# MLP / MoE                                                             #
+# --------------------------------------------------------------------- #
+class MLPParams(NamedTuple):
+    w_gate: Array   # (d, ff)
+    w_up: Array     # (d, ff)
+    w_down: Array   # (ff, d)
+
+
+def mlp_block(x: Array, p: MLPParams) -> Array:
+    h = jax.nn.silu(x @ p.w_gate) * (x @ p.w_up)
+    h = constrain(h, ("data", None, "model"))
+    return constrain(h @ p.w_down, ("data", None, None))
+
+
+class MoEParams(NamedTuple):
+    router: Array    # (d, E)
+    w_gate: Array    # (E, d, ffe)
+    w_up: Array      # (E, d, ffe)
+    w_down: Array    # (E, ffe, d)
+
+
+def _moe_dispatch_chunk(xf: Array, p: MoEParams, top_k: int, cap: int,
+                        e_pad: int) -> tuple[Array, Array]:
+    """Dispatch/compute/combine for one token chunk. xf (Tc, d)."""
+    t, d = xf.shape
+    e = p.router.shape[-1]
+    logits = (xf @ p.router).astype(jnp.float32)           # (Tc, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)      # (Tc, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balancing auxiliary loss.
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        jnp.ones((t * top_k,), jnp.float32)) / (t * top_k)
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = gate_idx.reshape(-1)                          # (Tc*k,)
+    flat_t = jnp.repeat(jnp.arange(t), top_k)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e)                            # stable
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * top_k) - starts[se]
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e_pad * cap)    # overflow -> trash
+
+    buf = jnp.zeros((e_pad * cap + 1, d), xf.dtype).at[slot].set(
+        jnp.where(keep[:, None], xf[st], 0.0))
+    buf = buf[:-1].reshape(e_pad, cap, d)
+    # Shard capacity on "data" as well: without it every data-group computes
+    # every expert's FULL capacity redundantly (16x wasted FLOPs — found via
+    # the dry-run roofline, see EXPERIMENTS.md §Perf).
+    buf = constrain(buf, ("model", "data", None))
+
+    pad_e = ((0, e_pad - e), (0, 0), (0, 0))
+    wg = jnp.pad(p.w_gate, pad_e).astype(xf.dtype)
+    wu = jnp.pad(p.w_up, pad_e).astype(xf.dtype)
+    wd = jnp.pad(p.w_down, pad_e).astype(xf.dtype)
+    hgate = jnp.einsum("ecd,edf->ecf", buf, wg)
+    hup = jnp.einsum("ecd,edf->ecf", buf, wu)
+    hout = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hgate) * hup, wd)
+    hout = constrain(hout, ("model", "data", None))
+
+    yflat = hout.reshape(e_pad * cap, d)
+    yflat = jnp.concatenate([yflat, jnp.zeros((1, d), xf.dtype)], axis=0)
+    gathered = yflat[slot] * (sw * keep)[:, None].astype(xf.dtype)
+    out = jnp.zeros((t, d), xf.dtype).at[st].add(gathered)
+    return out, aux
+
+
+def _moe_local_chunk(xf: Array, p_router: Array, wg: Array, wu: Array,
+                     wd: Array, top_k: int, cap: int, e_pad: int,
+                     my_experts: Array) -> tuple[Array, Array]:
+    """Per-device MoE for one LOCAL token chunk (runs inside shard_map).
+
+    xf (Tloc, d) local tokens; wg/wu/wd (E_loc, d, ffe)/( E_loc, ffe, d)
+    local expert weights; my_experts: global ids of local experts (E_loc,).
+    Each device routes its own tokens, slices the dispatch buffer rows that
+    belong to ITS experts, computes them, and scatters partial outputs back;
+    the cross-device combine is ONE psum over "model" done by the caller.
+    """
+    t, d = xf.shape
+    e = p_router.shape[-1]
+    e_loc = wg.shape[0]
+    logits = (xf @ p_router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        jnp.ones((t * top_k,), jnp.float32)) / (t * top_k)
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = gate_idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t), top_k)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * top_k) - starts[se]
+    # keep only choices routed to experts THIS device owns, within capacity
+    e0 = my_experts[0]
+    local = (se >= e0) & (se < e0 + e_loc) & (pos < cap)
+    slot = jnp.where(local, (se - e0) * cap + pos, e_loc * cap)
+
+    buf = jnp.zeros((e_loc * cap + 1, d), xf.dtype).at[slot].set(
+        jnp.where(local[:, None], xf[st], 0.0))
+    buf = buf[:-1].reshape(e_loc, cap, d)
+    hgate = jnp.einsum("ecd,edf->ecf", buf, wg)
+    hup = jnp.einsum("ecd,edf->ecf", buf, wu)
+    hout = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hgate) * hup, wd)
+
+    yflat = jnp.concatenate(
+        [hout.reshape(e_loc * cap, d), jnp.zeros((1, d), xf.dtype)], axis=0)
+    gathered = yflat[slot] * (sw * local)[:, None].astype(xf.dtype)
+    partial = jnp.zeros((t, d), xf.dtype).at[st].add(gathered)
+    return partial, aux
+
+
+def moe_block(x: Array, p: MoEParams, top_k: int, capacity_factor: float,
+              tokens_per_chunk: int = 65536, expert_pad: int = 16
+              ) -> tuple[Array, Array]:
+    """Top-k MoE with capacity; GShard-style expert parallelism.
+
+    Under an active mesh this runs as a shard_map: tokens stay sharded on
+    "data"(+"pod"), experts are sharded on "model" (zero-padded to divide),
+    every device computes ONLY its own experts' capacity rows, and the
+    combine is a single psum over "model" of the (Tloc, d) partial outputs —
+    the dispatch buffers never cross devices (the earlier pjit-auto scatter
+    lowered to per-chunk multi-GB all-reduces; see EXPERIMENTS.md §Perf).
+    Without a mesh it falls back to the single-device dispatch.
+    """
+    from repro.dist import api as dist_api
+
+    b, s, d = x.shape
+    e = p.router.shape[-1]
+    e_pad = ((e + expert_pad - 1) // expert_pad) * expert_pad
+
+    ctx = dist_api._current()
+    if ctx is None:
+        t = b * s
+        cap = min(int(max(4, (t * top_k / e) * capacity_factor)), t)
+        out, aux = _moe_dispatch_chunk(x.reshape(t, d), p, top_k, cap, e_pad)
+        return out.reshape(b, s, d), aux
+
+    mesh, tr = ctx
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    data_ax = tr.get("data")
+    model_ax = tr.get("model")
+    dp = 1
+    for a in (data_ax if isinstance(data_ax, tuple) else (data_ax,)):
+        if a:
+            dp *= mesh.shape[a]
+    mp = mesh.shape[model_ax] if model_ax else 1
+    e_loc = e_pad // mp
+
+    pad_e = ((0, e_pad - e), (0, 0), (0, 0))
+    wg = constrain(jnp.pad(p.w_gate, pad_e), ("model", "data", None))
+    wu = constrain(jnp.pad(p.w_up, pad_e), ("model", "data", None))
+    wd = constrain(jnp.pad(p.w_down, pad_e), ("model", None, "data"))
+
+    t_glob = b * s
+    t_loc = t_glob // dp
+    # local chunking bound (memory): local tokens per dispatch round
+    n_chunk = max(1, t_loc // tokens_per_chunk)
+    while t_loc % n_chunk:
+        n_chunk += 1
+    tc = t_loc // n_chunk
+    cap = min(int(max(4, (tc * top_k / e) * capacity_factor)), tc)
+
+    wspec_in = P(model_ax, dist_api.resolve_spec(("data",), (d,))[0], None)
+    wspec_out = P(model_ax, None,
+                  dist_api.resolve_spec(("data",), (d,))[0])
+    xspec = P(dist_api.resolve_spec(("data",), (t_glob,))[0], None)
+
+    def local_fn(xf_l, router_l, wg_l, wu_l, wd_l):
+        # gather FSDP-sharded expert weights once per layer (not per chunk)
+        if data_ax:
+            wg_f = jax.lax.all_gather(wg_l, data_ax, axis=1, tiled=True)
+            wu_f = jax.lax.all_gather(wu_l, data_ax, axis=1, tiled=True)
+            wd_f = jax.lax.all_gather(wd_l, data_ax, axis=2, tiled=True)
+        else:
+            wg_f, wu_f, wd_f = wg_l, wu_l, wd_l
+        midx = jax.lax.axis_index(model_ax) if model_ax else 0
+        my_experts = midx * e_loc + jnp.arange(e_loc)
+
+        def one(xc):
+            part, aux = _moe_local_chunk(
+                xc, router_l, wg_f.astype(xc.dtype), wu_f.astype(xc.dtype),
+                wd_f.astype(xc.dtype), top_k, cap, e_pad, my_experts)
+            return part, aux
+
+        if n_chunk == 1:
+            partial, aux = one(xf_l)
+        else:
+            parts, auxs = jax.lax.map(one, xf_l.reshape(n_chunk, tc, -1))
+            partial, aux = parts.reshape(t_loc, -1), auxs.mean()
+        out = jax.lax.psum(partial, model_ax) if model_ax else partial
+        all_axes = tuple(a for a in ((model_ax,) if model_ax else ()) +
+                         ((data_ax,) if isinstance(data_ax, str) else
+                          tuple(data_ax or ())))
+        aux = jax.lax.pmean(aux, all_axes) if all_axes else aux
+        return out, aux
+
+    out, aux = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(xspec, P(None, None), wspec_in, wspec_in, wspec_out),
+        out_specs=(xspec, P()),
+        check_vma=False,
+    )(x.reshape(t_glob, d), p.router, wg, wu, wd)
+    return out.reshape(b, s, d), aux

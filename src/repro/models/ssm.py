@@ -1,0 +1,153 @@
+"""Mamba-2 (SSD) layer: train-time chunked scan + O(1) decode step.
+
+The chunked evaluation treats the token-mixing operator as a semiseparable
+matrix — dense diagonal chunk blocks + rank-N off-diagonal state carriers —
+which is the same decomposition the paper applies hierarchically to kernel
+matrices (DESIGN.md §5).  The Pallas kernel (repro.kernels.ssd) implements
+the same schedule on TPU; the jnp path here is the differentiable reference.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import constrain
+from repro.kernels.ssd import ops as ssd_ops
+
+Array = jax.Array
+
+
+class SSMParams(NamedTuple):
+    in_proj: Array    # (d, 2*d_inner + 2*G*N + H)
+    conv_w: Array     # (convw, d_inner + 2*G*N)  depthwise causal conv
+    conv_b: Array     # (d_inner + 2*G*N,)
+    a_log: Array      # (H,)
+    d_skip: Array     # (H,)
+    dt_bias: Array    # (H,)
+    norm: Array       # (d_inner,)
+    out_proj: Array   # (d_inner, d)
+
+
+class SSMCache(NamedTuple):
+    conv: Array       # (B, convw-1, conv_dim)
+    state: Array      # (B, H, N, P)
+
+
+def _split_proj(cfg, zxbcdt: Array):
+    d_in = cfg.d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    z, x, b, c, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, x, b, c, dt
+
+
+def _gated_norm(y: Array, z: Array, gain: Array, eps: float) -> Array:
+    g = y * jax.nn.silu(z)
+    g32 = g.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(g32 * g32, axis=-1, keepdims=True) + eps)
+    return (g32 * scale * (1.0 + gain.astype(jnp.float32))).astype(y.dtype)
+
+
+def ssm_block(x: Array, p: SSMParams, cfg, return_cache: bool = False):
+    """Training/prefill forward. x (B, S, d) -> (B, S, d) [, SSMCache]."""
+    bsz, s, _ = x.shape
+    h, pdim, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    zxbcdt = x @ p.in_proj
+    z, xs, b, c, dt = _split_proj(cfg, zxbcdt)
+
+    xbc_raw = jnp.concatenate([xs, b, c], axis=-1)       # (B, S, conv_dim)
+    convw = p.conv_w.shape[0]
+    pad = jnp.pad(xbc_raw, ((0, 0), (convw - 1, 0), (0, 0)))
+    # depthwise causal conv as a sum of shifted slices (convw is tiny: 4)
+    out = jnp.zeros_like(xbc_raw)
+    for i in range(convw):
+        out = out + pad[:, i:i + s] * p.conv_w[i]
+    xbc = jax.nn.silu(out + p.conv_b)
+
+    d_in = cfg.d_inner
+    xs, b, c = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    xs = xs.reshape(bsz, s, h, pdim)
+    xs = constrain(xs, ("data", None, "model", None))
+    b = b.reshape(bsz, s, g, n)
+    c = c.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)  # (B, S, H)
+    a = -jnp.exp(p.a_log.astype(jnp.float32))
+
+    # §Perf change C1 (REFUTED, reverted): passing bf16 x/B/C into the SSD
+    # chunks was predicted to halve chunk-tensor traffic but MEASURED +2%
+    # (the per-operand f32 casts materialize as extra passes, same lesson
+    # as change A3).  The measured-best path upcasts once here; on real TPU
+    # the Pallas SSD kernel (kernels/ssd) supersedes the XLA chunk loop.
+    xs = xs.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    if return_cache:
+        from repro.kernels.ssd.ref import ssd_batched_with_state
+
+        y, h_fin = ssd_batched_with_state(
+            xs, dt, a, b, c, p.d_skip.astype(jnp.float32),
+            chunk=min(cfg.ssd_chunk, s))
+        y = y.astype(x.dtype)
+    else:
+        y = ssd_ops.ssd_forward(
+            xs, dt, a, b, c, p.d_skip.astype(jnp.float32),
+            chunk=min(cfg.ssd_chunk, s), use_pallas=False,
+        ).astype(x.dtype)
+    y = y.reshape(bsz, s, d_in)
+    y = _gated_norm(y, z, p.norm, cfg.norm_eps)
+    out_proj = constrain(y @ p.out_proj, ("data", None, None))
+    if return_cache:
+        # h_fin from the ref is (B, H, N, P); conv cache stores the RAW
+        # (pre-activation) xBC tail, matching ssm_decode_step's window.
+        conv_tail = xbc_raw[:, s - (convw - 1):s] if convw > 1 else \
+            xbc_raw[:, :0]
+        return out_proj, SSMCache(conv=conv_tail, state=h_fin)
+    return out_proj
+
+
+def ssm_cache_init(cfg, batch: int, dtype) -> SSMCache:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        state=jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32),
+    )
+
+
+def ssm_decode_step(x: Array, p: SSMParams, cache: SSMCache, cfg
+                    ) -> tuple[Array, SSMCache]:
+    """One-token decode. x (B, 1, d) -> (B, 1, d); O(1) state update."""
+    bsz = x.shape[0]
+    h, pdim, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    zxbcdt = x[:, 0] @ p.in_proj                        # (B, proj)
+    z, xs, b, c, dt = _split_proj(cfg, zxbcdt)
+
+    xbc = jnp.concatenate([xs, b, c], axis=-1)          # (B, conv_dim)
+    window = jnp.concatenate([cache.conv, xbc[:, None]], axis=1)  # (B,convw,·)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p.conv_w) + p.conv_b
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    d_in = cfg.d_inner
+    xs, b, c = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    xs = xs.reshape(bsz, h, pdim)
+    b = b.reshape(bsz, g, n)
+    c = c.reshape(bsz, g, n)
+    rep = h // g
+    b = jnp.repeat(b, rep, axis=1)                      # (B, H, N)
+    c = jnp.repeat(c, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)   # (B, H)
+    a = -jnp.exp(p.a_log.astype(jnp.float32))
+
+    decay = jnp.exp(dt * a)[..., None, None]            # (B, H, 1, 1)
+    upd = dt[..., None, None] * b[..., None] * xs[:, :, None, :]
+    state = cache.state * decay + upd                   # (B, H, N, P)
+    y = jnp.einsum("bhn,bhnp->bhp", c, state)
+    y = y + p.d_skip[None, :, None] * xs
+    y = y.reshape(bsz, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, p.norm, cfg.norm_eps)
+    out = (y @ p.out_proj)[:, None]
+    return out, SSMCache(conv=new_conv, state=state)

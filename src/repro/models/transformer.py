@@ -1,0 +1,579 @@
+"""Model assembly: parameter init, scan-over-layers forward, decode.
+
+Parameters are a plain nested dict whose per-layer leaves are STACKED along a
+leading (L,) axis and consumed by ``lax.scan`` — the HLO is one block body
+regardless of depth (essential for 100+-layer dry-run compiles), and the
+remat policy wraps the scan body.
+
+Families:
+  dense   — attn + SwiGLU MLP                      (gemma2/mistral/llama3/dsc)
+  moe     — attn + top-k MoE (+ optional parallel dense FFN — arctic)
+  ssm     — Mamba-2 SSD blocks only                (mamba2)
+  hybrid  — Mamba-2 blocks + ONE shared attention+MLP block applied every
+            ``shared_attn_every`` layers (zamba2; the shared block's weights
+            are reused at each application — simplification noted: the
+            per-application LoRA adapters of the real model are replaced by
+            per-application cache slots only)
+  encoder — bidirectional attn blocks (hubert) + masked-prediction head
+  vlm     — patch-prefix + causal text (paligemma; prefix-LM mask)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import constrain
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (AttnParams, MLPParams, MoEParams,
+                                 attention_block, decode_attention, mlp_block,
+                                 moe_block, rms_norm)
+
+Array = jax.Array
+Params = dict
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _cast_tree(tree, dtype):
+    """Cast float params to the compute dtype (fp32 masters -> bf16 compute)."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, tree)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ #
+    # init                                                               #
+    # ------------------------------------------------------------------ #
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = iter(jax.random.split(key, 64))
+        d, l = cfg.d_model, cfg.n_layers
+
+        def mat(k, *shape, scale=None):
+            scale = scale if scale is not None else shape[-2] ** -0.5
+            return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dt)
+
+        p: Params = {
+            "embed": mat(next(keys), cfg.vocab, d, scale=0.02),
+            "final_norm": jnp.zeros((d,), dt),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = mat(next(keys), d, cfg.vocab)
+
+        layers: Params = {"ln1": jnp.zeros((l, d), dt)}
+        if cfg.family in ("dense", "moe", "encoder", "vlm"):
+            hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            layers["attn"] = AttnParams(
+                wq=mat(next(keys), l, d, hq * hd),
+                wk=mat(next(keys), l, d, hkv * hd),
+                wv=mat(next(keys), l, d, hkv * hd),
+                wo=mat(next(keys), l, hq * hd, d),
+            )._asdict()
+            layers["ln2"] = jnp.zeros((l, d), dt)
+            if cfg.family == "moe":
+                e, ffe = cfg.n_experts, cfg.d_ff
+                layers["moe"] = MoEParams(
+                    router=mat(next(keys), l, d, e),
+                    w_gate=mat(next(keys), l, e, d, ffe),
+                    w_up=mat(next(keys), l, e, d, ffe),
+                    w_down=mat(next(keys), l, e, ffe, d),
+                )._asdict()
+                if cfg.moe_dense_ff:
+                    layers["mlp"] = MLPParams(
+                        w_gate=mat(next(keys), l, d, cfg.moe_dense_ff),
+                        w_up=mat(next(keys), l, d, cfg.moe_dense_ff),
+                        w_down=mat(next(keys), l, cfg.moe_dense_ff, d),
+                    )._asdict()
+            else:
+                layers["mlp"] = MLPParams(
+                    w_gate=mat(next(keys), l, d, cfg.d_ff),
+                    w_up=mat(next(keys), l, d, cfg.d_ff),
+                    w_down=mat(next(keys), l, cfg.d_ff, d),
+                )._asdict()
+        if cfg.family in ("ssm", "hybrid"):
+            layers.update(self._ssm_layer_init(next(keys), l))
+        p["layers"] = layers
+
+        if cfg.family == "hybrid":
+            hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            p["shared"] = {
+                "ln1": jnp.zeros((d,), dt),
+                "ln2": jnp.zeros((d,), dt),
+                "attn": AttnParams(
+                    wq=mat(next(keys), d, hq * hd),
+                    wk=mat(next(keys), d, hkv * hd),
+                    wv=mat(next(keys), d, hkv * hd),
+                    wo=mat(next(keys), hq * hd, d),
+                )._asdict(),
+                "mlp": MLPParams(
+                    w_gate=mat(next(keys), d, cfg.d_ff),
+                    w_up=mat(next(keys), d, cfg.d_ff),
+                    w_down=mat(next(keys), cfg.d_ff, d),
+                )._asdict(),
+            }
+        if cfg.frontend == "vision_stub":
+            p["vision_proj"] = mat(next(keys), cfg.frontend_dim, d)
+        if cfg.frontend == "audio_stub":
+            p["frontend_proj"] = mat(next(keys), cfg.frontend_dim, d)
+            p["mask_emb"] = mat(next(keys), d, scale=0.02)
+        return p
+
+    def _ssm_layer_init(self, key, l):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        d = cfg.d_model
+        keys = jax.random.split(key, 4)
+        d_in = cfg.d_inner
+        gn = cfg.ssm_groups * cfg.ssm_state
+        proj_out = 2 * d_in + 2 * gn + cfg.ssm_heads
+        conv_dim = d_in + 2 * gn
+        dt0 = jnp.exp(jax.random.uniform(
+            keys[2], (l, cfg.ssm_heads), jnp.float32,
+            jnp.log(1e-3), jnp.log(1e-1)))
+        dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))   # inverse softplus
+        return {
+            "ssm": ssm_mod.SSMParams(
+                in_proj=(jax.random.normal(keys[0], (l, d, proj_out)) *
+                         d ** -0.5).astype(dt),
+                conv_w=(jax.random.normal(keys[1], (l, cfg.ssm_conv, conv_dim))
+                        * cfg.ssm_conv ** -0.5).astype(dt),
+                conv_b=jnp.zeros((l, conv_dim), dt),
+                a_log=jnp.log(jnp.broadcast_to(
+                    jnp.linspace(1.0, 16.0, cfg.ssm_heads), (l, cfg.ssm_heads))
+                ).astype(jnp.float32),
+                d_skip=jnp.ones((l, cfg.ssm_heads), jnp.float32),
+                dt_bias=dt_bias.astype(jnp.float32),
+                norm=jnp.zeros((l, d_in), dt),
+                out_proj=(jax.random.normal(keys[3], (l, d_in, d)) *
+                          d_in ** -0.5).astype(dt),
+            )._asdict()
+        }
+
+    # ------------------------------------------------------------------ #
+    # embedding / unembedding                                            #
+    # ------------------------------------------------------------------ #
+    def embed_tokens(self, params: Params, tokens: Array) -> Array:
+        cfg = self.cfg
+        emb = params["embed"].astype(_cdtype(cfg))
+        x = jnp.take(emb, tokens, axis=0) * (cfg.d_model ** 0.5)
+        return constrain(x, ("data", None, None))
+
+    def embed_inputs(self, params: Params, batch: dict) -> tuple[Array, Array]:
+        """Returns (x (B,S,d), prefix_len) handling modality frontends."""
+        cfg = self.cfg
+        cd = _cdtype(cfg)
+        if cfg.frontend == "audio_stub":
+            x = batch["frames"].astype(cd) @ params["frontend_proj"].astype(cd)
+            if "mask_indices" in batch:
+                m = batch["mask_indices"][..., None]
+                x = jnp.where(m, params["mask_emb"].astype(cd), x)
+            return constrain(x, ("data", None, None)), 0
+        if cfg.frontend == "vision_stub":
+            vis = batch["patches"].astype(cd) @ params["vision_proj"].astype(cd)
+            txt = self.embed_tokens(params, batch["tokens"])
+            x = jnp.concatenate([vis, txt], axis=1)
+            return constrain(x, ("data", None, None)), cfg.n_prefix_tokens
+        return self.embed_tokens(params, batch["tokens"]), 0
+
+    def logits(self, params: Params, x: Array) -> Array:
+        cfg = self.cfg
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["head"]).astype(_cdtype(cfg))
+        out = (x @ head).astype(jnp.float32)
+        if cfg.final_softcap > 0:
+            out = cfg.final_softcap * jnp.tanh(out / cfg.final_softcap)
+        return out
+
+    # ------------------------------------------------------------------ #
+    # forward (train / prefill)                                          #
+    # ------------------------------------------------------------------ #
+    def _layer_windows(self) -> Array:
+        """Per-layer window sizes: gemma2 alternates local/global."""
+        cfg = self.cfg
+        if cfg.alt_local_global:
+            return jnp.where(jnp.arange(cfg.n_layers) % 2 == 0, cfg.window, 0)
+        return jnp.full((cfg.n_layers,), cfg.window, jnp.int32)
+
+    def _block(self, x, lp, positions, window, prefix_len, collect_kv=False):
+        cfg = self.cfg
+        lp = _cast_tree(lp, _cdtype(cfg))
+        aux = jnp.zeros((), jnp.float32)
+        kv = None
+        if cfg.family in ("ssm", "hybrid"):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            x = x + ssm_mod.ssm_block(h, ssm_mod.SSMParams(**lp["ssm"]), cfg)
+        else:
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            ap = AttnParams(**lp["attn"])
+            x = x + attention_block(h, ap, positions, cfg, window, prefix_len)
+            h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                mo, aux = moe_block(h2, MoEParams(**lp["moe"]), cfg.top_k,
+                                    cfg.capacity_factor)
+                if cfg.moe_dense_ff:
+                    mo = mo + mlp_block(h2, MLPParams(**lp["mlp"]))
+                x = x + mo
+            else:
+                x = x + mlp_block(h2, MLPParams(**lp["mlp"]))
+            if collect_kv:
+                from repro.models.layers import apply_rope
+                b, s, _ = h.shape
+                k_rot = apply_rope(
+                    (h @ ap.wk).reshape(b, s, cfg.n_kv_heads, cfg.head_dim),
+                    positions, cfg.rope_theta)
+                kv = (
+                    k_rot,
+                    (h @ ap.wv).reshape(b, s, cfg.n_kv_heads, cfg.head_dim),
+                )
+        return x, aux, kv
+
+    def _shared_block(self, x, sp, positions, prefix_len):
+        cfg = self.cfg
+        sp = _cast_tree(sp, _cdtype(cfg))
+        h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        x = x + attention_block(h, AttnParams(**sp["attn"]), positions, cfg,
+                                0, prefix_len)
+        h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)
+        return x + mlp_block(h2, MLPParams(**sp["mlp"]))
+
+    def backbone(self, params: Params, x: Array, positions: Array,
+                 prefix_len: Array | int = 0) -> tuple[Array, Array]:
+        """Scan over layers. Returns (hidden (B,S,d), aux_loss)."""
+        cfg = self.cfg
+        windows = self._layer_windows()
+        shared = params.get("shared")
+
+        def body(carry, xs):
+            h, aux = carry
+            lp, win, idx = xs
+            h, a, _ = self._block(h, lp, positions, win, prefix_len)
+            if shared is not None and cfg.shared_attn_every:
+                h = jax.lax.cond(
+                    (idx + 1) % cfg.shared_attn_every == 0,
+                    lambda v: self._shared_block(v, shared, positions,
+                                                 prefix_len),
+                    lambda v: v, h)
+            # Megatron-SP-style: keep the saved residual sequence-sharded on
+            # "model" — the per-layer remat residual is the dominant training
+            # memory at 100B+ scale (see EXPERIMENTS.md §Perf, llama3 cell).
+            h = constrain(h, ("data", "model", None))
+            return (h, aux + a), None
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], windows, jnp.arange(cfg.n_layers)))
+        return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+    # ------------------------------------------------------------------ #
+    # losses                                                             #
+    # ------------------------------------------------------------------ #
+    def chunked_ce(self, params: Params, hidden: Array, labels: Array
+                   ) -> Array:
+        """Cross-entropy without materializing (B, S, V): scan over S chunks.
+
+        labels == -1 are ignored (padding / prefix positions).
+        """
+        cfg = self.cfg
+        b, s, d = hidden.shape
+        cs = min(cfg.loss_chunk, s)
+        while s % cs:
+            cs -= 1
+        nch = s // cs
+        hx = jnp.moveaxis(hidden.reshape(b, nch, cs, d), 1, 0)
+        lx = jnp.moveaxis(labels.reshape(b, nch, cs), 1, 0)
+
+        def chunk_loss(h_chunk, l_chunk):
+            logits = self.logits(params, h_chunk)          # (B, cs, V) f32
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(l_chunk, 0)[..., None], axis=-1)[..., 0]
+            valid = (l_chunk >= 0).astype(jnp.float32)
+            return jnp.sum((logz - gold) * valid), jnp.sum(valid)
+
+        chunk_loss = jax.checkpoint(chunk_loss)
+
+        def body(carry, xs):
+            tot, cnt = carry
+            h_chunk, l_chunk = xs
+            dl, dc = chunk_loss(h_chunk, l_chunk)
+            return (tot + dl, cnt + dc), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (hx, lx))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    def forward_logits(self, params: Params, batch: dict) -> Array:
+        """Full-sequence logits (small-scale tests / serving prefill only)."""
+        x, prefix_len = self.embed_inputs(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        hidden, _ = self.backbone(params, x, positions, prefix_len)
+        return self.logits(params, hidden)
+
+    def loss_fn(self, params: Params, batch: dict) -> tuple[Array, dict]:
+        cfg = self.cfg
+        x, prefix_len = self.embed_inputs(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        hidden, aux = self.backbone(params, x, positions, prefix_len)
+        labels = batch["labels"]
+        if cfg.frontend == "vision_stub":
+            hidden = hidden[:, cfg.n_prefix_tokens:]
+        if cfg.frontend == "audio_stub" and "mask_indices" in batch:
+            labels = jnp.where(batch["mask_indices"], labels, -1)
+        ce = self.chunked_ce(params, hidden, labels)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------ #
+    # serving: prefill + decode                                          #
+    # ------------------------------------------------------------------ #
+    def cache_init(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        cd = _cdtype(cfg)
+        l = cfg.n_layers
+        cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+        if cfg.family in ("dense", "moe", "vlm", "encoder"):
+            shape = (l, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            cache["k"] = jnp.zeros(shape, cd)
+            cache["v"] = jnp.zeros(shape, cd)
+        if cfg.family in ("ssm", "hybrid"):
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            cache["ssm_conv"] = jnp.zeros((l, batch, cfg.ssm_conv - 1,
+                                           conv_dim), cd)
+            cache["ssm_state"] = jnp.zeros(
+                (l, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                jnp.float32)
+        if cfg.family == "hybrid" and cfg.shared_attn_every:
+            napp = cfg.n_layers // cfg.shared_attn_every
+            shape = (napp, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            cache["shared_k"] = jnp.zeros(shape, cd)
+            cache["shared_v"] = jnp.zeros(shape, cd)
+        return cache
+
+    def decode_step(self, params: Params, cache: dict, tokens: Array
+                    ) -> tuple[Array, dict]:
+        """One decode step for ALL families. tokens (B, 1) -> logits (B, V)."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)            # (B, 1, d)
+        pos = cache["pos"]
+        b = x.shape[0]
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        windows = self._layer_windows()
+        shared = params.get("shared")
+        if shared is not None:
+            shared = _cast_tree(shared, _cdtype(cfg))
+        new_cache = dict(cache)
+
+        def attn_decode(h, ap, k_cache, v_cache, win):
+            bq = (h @ ap.wq).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+            bk = (h @ ap.wk).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+            bv = (h @ ap.wv).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+            from repro.models.layers import apply_rope
+            bq = apply_rope(bq, positions, cfg.rope_theta)
+            bk = apply_rope(bk, positions, cfg.rope_theta)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, bk.astype(k_cache.dtype), pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, bv.astype(v_cache.dtype), pos, axis=1)
+            cur = jnp.full((b,), pos + 1, jnp.int32)
+            out = decode_attention(bq, k_cache, v_cache, cur,
+                                   softcap=cfg.attn_softcap, window=win)
+            return (out.reshape(b, 1, -1) @ ap.wo), k_cache, v_cache
+
+        if cfg.family in ("dense", "moe", "vlm", "encoder"):
+            def body(carry, xs):
+                h = carry
+                lp, kc, vc, win = xs
+                lp = _cast_tree(lp, _cdtype(cfg))
+                hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+                att, kc, vc = attn_decode(hn, AttnParams(**lp["attn"]), kc,
+                                          vc, win)
+                h = h + att
+                h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+                if cfg.family == "moe":
+                    mo, _ = moe_block(h2, MoEParams(**lp["moe"]), cfg.top_k,
+                                      cfg.capacity_factor)
+                    if cfg.moe_dense_ff:
+                        mo = mo + mlp_block(h2, MLPParams(**lp["mlp"]))
+                    h = h + mo
+                else:
+                    h = h + mlp_block(h2, MLPParams(**lp["mlp"]))
+                return h, (kc, vc)
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"], windows))
+            new_cache["k"], new_cache["v"] = ks, vs
+        else:   # ssm / hybrid
+            def ssm_scan(x_in, lp_seg, conv_seg, state_seg):
+                def body(h, xs):
+                    lp, conv_c, state_c = xs
+                    lp = _cast_tree(lp, _cdtype(cfg))
+                    hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+                    out, sc = ssm_mod.ssm_decode_step(
+                        hn, ssm_mod.SSMParams(**lp["ssm"]),
+                        ssm_mod.SSMCache(conv=conv_c, state=state_c), cfg)
+                    return h + out, (sc.conv, sc.state)
+
+                return jax.lax.scan(body, x_in, (lp_seg, conv_seg, state_seg))
+
+            every = cfg.shared_attn_every
+            if shared is None or not every:
+                x, (convs, states) = ssm_scan(
+                    x, params["layers"], cache["ssm_conv"],
+                    cache["ssm_state"])
+                new_cache["ssm_conv"], new_cache["ssm_state"] = convs, states
+            else:
+                # §Perf change B1: shared-attention KV caches must NOT ride
+                # the layer-scan carry (each iteration copies the whole
+                # cache: 38 x 100 MB/token at 500k).  Segment the loop so
+                # each shared application is OUTSIDE the scan with a STATIC
+                # cache index.
+                napp = cfg.n_layers // every
+                take = lambda t, a, b: jax.tree.map(lambda v: v[a:b], t)
+                convs_out, states_out, sks, svs = [], [], [], []
+                sk_cache, sv_cache = cache["shared_k"], cache["shared_v"]
+                for seg in range(napp):
+                    a, b_ = seg * every, (seg + 1) * every
+                    x, (cv, st) = ssm_scan(
+                        x, take(params["layers"], a, b_),
+                        cache["ssm_conv"][a:b_], cache["ssm_state"][a:b_])
+                    convs_out.append(cv)
+                    states_out.append(st)
+                    hn = rms_norm(x, shared["ln1"], cfg.norm_eps)
+                    att, kc, vc = attn_decode(
+                        hn, AttnParams(**shared["attn"]),
+                        sk_cache[seg], sv_cache[seg], 0)
+                    x = x + att
+                    h2 = rms_norm(x, shared["ln2"], cfg.norm_eps)
+                    x = x + mlp_block(h2, MLPParams(**shared["mlp"]))
+                    sks.append(kc)
+                    svs.append(vc)
+                if napp * every < cfg.n_layers:
+                    x, (cv, st) = ssm_scan(
+                        x, take(params["layers"], napp * every,
+                                cfg.n_layers),
+                        cache["ssm_conv"][napp * every:],
+                        cache["ssm_state"][napp * every:])
+                    convs_out.append(cv)
+                    states_out.append(st)
+                new_cache["ssm_conv"] = jnp.concatenate(convs_out, axis=0)
+                new_cache["ssm_state"] = jnp.concatenate(states_out, axis=0)
+                new_cache["shared_k"] = jnp.stack(sks, axis=0)
+                new_cache["shared_v"] = jnp.stack(svs, axis=0)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.logits(params, x)[:, 0]
+        new_cache["pos"] = pos + 1
+        return logits, new_cache
+
+    def prefill(self, params: Params, batch: dict, max_len: int
+                ) -> tuple[Array, dict]:
+        """Process a full prompt; returns (last-token logits, filled cache).
+
+        For attention families the per-layer K/V are recomputed from the
+        block inputs (one extra pair of projections — cheap next to the
+        attention itself) and written into the cache.
+        """
+        cfg = self.cfg
+        x, prefix_len = self.embed_inputs(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        windows = self._layer_windows()
+        cache = self.cache_init(b, max_len)
+
+        if cfg.family in ("ssm", "hybrid"):
+            return self._prefill_ssm(params, x, positions, prefix_len, cache,
+                                     max_len)
+
+        def body(carry, xs):
+            h = carry
+            lp, win = xs
+            h2, _, kv = self._block(h, lp, positions, win, prefix_len,
+                                    collect_kv=True)
+            return h2, kv
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], windows))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        pad = max_len - s
+        cache["k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["pos"] = jnp.asarray(s, jnp.int32)
+        logits = self.logits(params, x[:, -1:])[:, 0]
+        return logits, cache
+
+    def _prefill_ssm(self, params, x, positions, prefix_len, cache, max_len):
+        """SSM / hybrid prefill: fills SSD states (+ shared-block KV)."""
+        from repro.models.layers import apply_rope
+
+        cfg = self.cfg
+        b, s, _ = x.shape
+        shared = params.get("shared")
+        if shared is not None:
+            shared = _cast_tree(shared, _cdtype(cfg))
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
+        cd = _cdtype(cfg)
+
+        def body(h, xs):
+            lp, idx = xs
+            lp = _cast_tree(lp, _cdtype(cfg))
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            out, sc = ssm_mod.ssm_block(
+                hn, ssm_mod.SSMParams(**lp["ssm"]), cfg, return_cache=True)
+            h = h + out
+            sk = jnp.zeros((b, s, kvh, hd), cd)
+            sv = jnp.zeros((b, s, kvh, hd), cd)
+            if shared is not None and cfg.shared_attn_every:
+                def apply_shared(v):
+                    hn2 = rms_norm(v, shared["ln1"], cfg.norm_eps)
+                    ap = AttnParams(**shared["attn"])
+                    att = attention_block(hn2, ap, positions, cfg, 0,
+                                          prefix_len)
+                    h2 = v + att
+                    h3 = rms_norm(h2, shared["ln2"], cfg.norm_eps)
+                    h2 = h2 + mlp_block(h3, MLPParams(**shared["mlp"]))
+                    k_rot = apply_rope((hn2 @ ap.wk).reshape(b, s, kvh, hd),
+                                       positions, cfg.rope_theta)
+                    v_raw = (hn2 @ ap.wv).reshape(b, s, kvh, hd)
+                    return h2, k_rot.astype(cd), v_raw.astype(cd)
+
+                h, sk, sv = jax.lax.cond(
+                    (idx + 1) % cfg.shared_attn_every == 0,
+                    apply_shared, lambda v: (v, sk, sv), h)
+            return h, (sc.conv.astype(cd), sc.state, sk, sv)
+
+        x, (convs, states, sks, svs) = jax.lax.scan(
+            body, x, (params["layers"], jnp.arange(cfg.n_layers)))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        cache["ssm_conv"], cache["ssm_state"] = convs, states
+        if shared is not None and cfg.shared_attn_every:
+            k = cfg.shared_attn_every
+            app_layers = jnp.arange(k - 1, cfg.n_layers, k)
+            pad = max_len - s
+            cache["shared_k"] = jnp.pad(
+                sks[app_layers], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cache["shared_v"] = jnp.pad(
+                svs[app_layers], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["pos"] = jnp.asarray(s, jnp.int32)
+        logits = self.logits(params, x[:, -1:])[:, 0]
+        return logits, cache

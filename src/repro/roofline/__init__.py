@@ -1,0 +1,5 @@
+"""Roofline-term extraction from compiled XLA artifacts."""
+
+from repro.roofline.analysis import (HW, collective_bytes, roofline_report)
+
+__all__ = ["HW", "collective_bytes", "roofline_report"]

@@ -1,0 +1,335 @@
+"""Loop-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE (verified in
+tests/test_roofline.py), which under-counts scan-over-layers models by ~L and
+chunked attention/MoE by their trip counts.  This module walks the HLO
+computation graph, multiplies each computation by the product of enclosing
+while trip counts, and produces loop-corrected totals:
+
+  flops       — 2 * numel(dot output) * contracted extent, summed over dots
+                (matmuls dominate these models; elementwise flops ignored,
+                documented in EXPERIMENTS.md)
+  bytes       — per instruction: output + operand bytes, where fusions count
+                as single ops (their internals are register/VMEM traffic,
+                not HBM) and bookkeeping ops (tuple plumbing, parameters,
+                constants, while carry) are skipped
+  collectives — operand bytes of all-reduce / all-gather / reduce-scatter /
+                all-to-all / collective-permute, same multipliers
+
+Trip counts are read from each while's condition computation: jax lowers
+``lax.scan``/``lax.map``/``fori_loop`` to a counted while whose condition
+compares the induction variable against a constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+_KNOWN_TRIPS = re.compile(r'"known_trip_count":\s*{\s*"n":\s*"(\d+)"')
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_CALLED = re.compile(
+    r"(?:to_apply|calls|body|condition|true_computation|false_computation)="
+    r"%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "while",
+    "conditional", "call", "bitcast", "copy-start", "copy-done",
+    "after-all", "iota", "partition-id", "replica-id",
+}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+
+def _shape_bytes_of(text: str) -> int:
+    return sum(
+        _numel(dims) * _DTYPE_BYTES.get(t, 0)
+        for t, dims in _SHAPE_TOKEN.findall(text))
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_bytes: int
+    out_shape: tuple[tuple[str, str], ...]
+    opcode: str
+    operands_text: str
+    attrs_text: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    shapes: dict[str, str]          # instr name -> "type[dims]" text
+
+    def param_read_bytes(self) -> dict[int, int]:
+        """Effective read size per parameter index.
+
+        A parameter consumed ONLY through dynamic-slice / gather is read at
+        the slice size, not the full array — this is what makes per-layer
+        reads of scan-stacked weights count as one layer, not L layers.
+        """
+        out: dict[int, int] = {}
+        params: dict[str, int] = {}
+        for ins in self.instrs:
+            if ins.opcode == "parameter":
+                m = re.match(r"(\d+)", ins.operands_text)
+                if m:
+                    params[ins.name] = int(m.group(1))
+        for pname, pidx in params.items():
+            full = _shape_bytes_of(self.shapes.get(pname, ""))
+            consumers = [i for i in self.instrs
+                         if pname in _operand_names(i.operands_text)]
+            if consumers and all(
+                    c.opcode in ("dynamic-slice", "gather") and
+                    _operand_names(c.operands_text)[:1] == [pname]
+                    for c in consumers):
+                out[pidx] = sum(c.out_bytes for c in consumers)
+            else:
+                out[pidx] = full
+        return out
+
+    def root_is_dus(self) -> Instr | None:
+        for ins in self.instrs:
+            if ins.opcode == "dynamic-update-slice":
+                return ins
+        return None
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _COMP_HEAD.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, outsig, opcode, rest = m.groups()
+        # rest = "operands), attrs..." — split at the matching close paren
+        depth = 1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operands = rest[:i] if depth == 0 else rest
+        attrs = rest[i + 1:] if depth == 0 else ""
+        cur.shapes[name] = outsig
+        cur.instrs.append(Instr(
+            name=name,
+            out_bytes=_shape_bytes_of(outsig),
+            out_shape=tuple(_SHAPE_TOKEN.findall(outsig)),
+            opcode=opcode,
+            operands_text=operands,
+            attrs_text=attrs,
+        ))
+    return comps
+
+
+def _operand_names(text: str) -> list[str]:
+    return re.findall(r"%([\w.\-]+)", text)
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max integer constant in the while condition ~ the trip bound."""
+    best = 1
+    for ins in cond.instrs:
+        for m in _CONST_INT.finditer(ins.opcode + "(" + ins.operands_text):
+            best = max(best, int(m.group(1)))
+        for m in _CONST_INT.finditer(ins.attrs_text):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, shapes: dict[str, str]) -> float:
+    out_elems = sum(_numel(d) for _, d in ins.out_shape) or 1
+    ops = _operand_names(ins.operands_text)
+    if not ops:
+        return 0.0
+    lhs = shapes.get(ops[0], "")
+    mdims = _SHAPE_TOKEN.search(lhs)
+    if not mdims:
+        return 0.0
+    lhs_dims = [int(d) for d in mdims.group(2).split(",") if d]
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs_text)
+    contracted = 1
+    if mc and mc.group(1):
+        for ax in mc.group(1).split(","):
+            ax = int(ax)
+            if ax < len(lhs_dims):
+                contracted *= lhs_dims[ax]
+    return 2.0 * out_elems * contracted
+
+
+def analyze(hlo: str, entry: str | None = None) -> dict[str, Any]:
+    comps = parse_module(hlo)
+    if entry is None:
+        # the ENTRY computation is usually named main.<n>
+        entry = next((n for n in comps if n.startswith("main")), None) or \
+            next(iter(comps))
+
+    totals = dict(flops=0.0, bytes=0.0, collective_bytes=0.0,
+                  collective_ring_bytes=0.0, collective_per_op={},
+                  n_collectives=0, n_while=0, max_depth_mult=1.0,
+                  bytes_by_mult={})
+
+    def _acc_bytes(mult, nbytes):
+        totals["bytes"] += mult * nbytes
+        d = totals["bytes_by_mult"]
+        key = int(mult)
+        d[key] = d.get(key, 0.0) + mult * nbytes
+    visited_mult: dict[str, float] = {}
+
+    def visit(comp_name: str, mult: float):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        # allow revisits with different multipliers (shared computations)
+        key = comp_name
+        visited_mult[key] = visited_mult.get(key, 0.0) + mult
+        totals["max_depth_mult"] = max(totals["max_depth_mult"], mult)
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                called = dict(
+                    (k, v) for k, v in re.findall(
+                        r"(body|condition)=%?([\w.\-]+)",
+                        ins.operands_text + " " + ins.attrs_text))
+                mt = _KNOWN_TRIPS.search(ins.attrs_text)
+                if mt:      # XLA's own annotation — authoritative
+                    trips = int(mt.group(1))
+                else:
+                    cond = comps.get(called.get("condition", ""))
+                    trips = _trip_count(cond) if cond else 1
+                totals["n_while"] += 1
+                if called.get("body") and called["body"] != comp_name:
+                    visit(called["body"], mult * trips)
+                continue
+            if op == "conditional":
+                mb = _BRANCHES.search(ins.attrs_text + ins.operands_text)
+                branches = []
+                if mb:
+                    branches = _operand_names(mb.group(1))
+                else:
+                    branches = [c for _, c in re.findall(
+                        r"(true_computation|false_computation)=%?([\w.\-]+)",
+                        ins.attrs_text + ins.operands_text)]
+                for b in branches:
+                    visit(b, mult)   # upper bound: both branches counted
+                continue
+            if op in ("call", "async-start"):
+                m = _CALLED.search(ins.attrs_text + ins.operands_text)
+                if m:
+                    visit(m.group(1), mult)
+                continue
+            if op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)",
+                              ins.attrs_text + ins.operands_text)
+                fcomp = comps.get(m.group(1)) if m else None
+                # fusion counts as ONE op for bytes; dots inside still count
+                out_eff = ins.out_bytes
+                reads = sum(_shape_bytes_of(comp.shapes.get(n, ""))
+                            for n in _operand_names(ins.operands_text))
+                if fcomp is not None:
+                    for fins in fcomp.instrs:
+                        if fins.opcode == "dot":
+                            totals["flops"] += mult * _dot_flops(
+                                fins, fcomp.shapes)
+                    # slice-aware reads + in-place update-slice writes
+                    pr = fcomp.param_read_bytes()
+                    onames = _operand_names(ins.operands_text)
+                    reads = sum(
+                        pr.get(i, _shape_bytes_of(comp.shapes.get(n, "")))
+                        for i, n in enumerate(onames))
+                    dus = fcomp.root_is_dus()
+                    if dus is not None:
+                        ops = _operand_names(dus.operands_text)
+                        upd = (_shape_bytes_of(fcomp.shapes.get(ops[1], ""))
+                               if len(ops) > 1 else 0)
+                        out_eff = upd or ins.out_bytes
+                        # the full buffer passes through in place: drop its
+                        # read too (it equals the fusion output size)
+                        reads = max(reads - ins.out_bytes, 0)
+                _acc_bytes(mult, out_eff + reads)
+                continue
+            if op == "dot":
+                totals["flops"] += mult * _dot_flops(ins, comp.shapes)
+            base = op.replace("-start", "")
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                ob = sum(_shape_bytes_of(comp.shapes.get(n, ""))
+                         for n in _operand_names(ins.operands_text))
+                totals["collective_bytes"] += mult * ob
+                totals["n_collectives"] += 1
+                d = totals["collective_per_op"]
+                d[base] = d.get(base, 0.0) + mult * ob
+                mg = re.search(r"replica_groups=\[(\d+),(\d+)\]",
+                               ins.attrs_text)
+                if mg:
+                    n_grp = int(mg.group(2))
+                else:
+                    mg2 = re.search(r"replica_groups=\{\{([\d,]+)\}",
+                                    ins.attrs_text)
+                    n_grp = (len(mg2.group(1).split(",")) if mg2 else 2)
+                frac = (n_grp - 1) / max(n_grp, 1)
+                ring = {"all-reduce": 2 * ob * frac,
+                        "all-gather": ob * (n_grp - 1),
+                        "reduce-scatter": ob * frac,
+                        "all-to-all": ob * frac,
+                        "collective-permute": float(ob)}[base]
+                totals["collective_ring_bytes"] += mult * ring
+            if op in _SKIP_BYTES_OPS or op.endswith("-done") or \
+                    base in ("all-reduce", "all-gather", "reduce-scatter",
+                             "all-to-all", "collective-permute"):
+                continue    # collectives belong to the collective term
+            ops = _operand_names(ins.operands_text)
+            if op == "dynamic-slice" or op == "gather":
+                op_bytes = 2 * ins.out_bytes           # slice read + write
+            elif op == "dynamic-update-slice":
+                upd = (_shape_bytes_of(comp.shapes.get(ops[1], ""))
+                       if len(ops) > 1 else ins.out_bytes)
+                op_bytes = 2 * upd                     # in-place update
+            else:
+                op_bytes = ins.out_bytes + sum(
+                    _shape_bytes_of(comp.shapes.get(n, "")) for n in ops)
+            _acc_bytes(mult, op_bytes)
+
+    visit(entry, 1.0)
+    totals["computation_multipliers"] = {
+        k: v for k, v in sorted(visited_mult.items()) if v > 1.0}
+    return totals

@@ -1,0 +1,120 @@
+"""int8 error-feedback gradient compression for the DP all-reduce.
+
+The wire format of the data-parallel gradient reduction is int8 with one
+f32 scale per block: a reduce-scatter expressed as all_to_all of QUANTIZED
+chunks (each device receives every peer's int8 chunk, dequantizes and sums
+locally), then an all_gather of the re-quantized reduced chunk — 4x less
+link traffic than f32 (~2x vs bf16) at both stages.
+
+Error feedback (Seide et al. / EF-SGD): the quantization residual is added
+back into the next step's gradient, making the compression unbiased over
+time — required for convergence at int8.
+
+Composition: applies to the pure-DP / ZeRO-1 regime (params replicated over
+"data").  With ZeRO-3 FSDP, XLA already emits reduce-scatter of bf16 shards;
+compressing those is future work (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def _quantize(x: jax.Array, block: int = 2048):
+    """Per-block int8 quantization. x flat (N,) -> (q int8, scales f32)."""
+    n = x.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(xp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, n: int) -> jax.Array:
+    x = q.astype(jnp.float32) * scale[:, None]
+    return x.reshape(-1)[:n]
+
+
+def compress_roundtrip(x: jax.Array, block: int = 2048) -> jax.Array:
+    q, s = _quantize(x, block)
+    return _dequantize(q, s, x.shape[0])
+
+
+def compressed_psum_local(g_local: jax.Array, axis_name: str,
+                          n_shards: int, block: int = 2048) -> jax.Array:
+    """Quantized all-reduce over ``axis_name`` (call inside shard_map).
+
+    g_local (N,) with N divisible by n_shards.  Wire traffic per device:
+    int8 all_to_all (N bytes) + int8 all_gather (N bytes) vs 8N for f32
+    ring all-reduce.
+    """
+    n = g_local.shape[0]
+    chunks = g_local.reshape(n_shards, n // n_shards)
+    q, s = jax.vmap(lambda c: _quantize(c, block))(chunks)
+    # every device receives peer chunk i == its index
+    q_all = jax.lax.all_to_all(q[None], axis_name, split_axis=1,
+                               concat_axis=0, tiled=False)[:, 0]
+    s_all = jax.lax.all_to_all(s[None], axis_name, split_axis=1,
+                               concat_axis=0, tiled=False)[:, 0]
+    deq = jax.vmap(lambda qq, ss: _dequantize(qq, ss, n // n_shards))(
+        q_all, s_all)
+    reduced = jnp.sum(deq, axis=0)                      # (N/n_shards,)
+    q_r, s_r = _quantize(reduced, block)
+    q_full = jax.lax.all_gather(q_r, axis_name)         # (n, blocks, block)
+    s_full = jax.lax.all_gather(s_r, axis_name)
+    parts = jax.vmap(lambda qq, ss: _dequantize(qq, ss, n // n_shards))(
+        q_full, s_full)
+    return parts.reshape(-1)[:n]
+
+
+def make_compressed_allreduce(mesh, axis_name: str = "data",
+                              block: int = 2048):
+    """Returns f(grads_stacked (n_shards, N)) -> reduced (N,) under jit.
+
+    grads_stacked holds each data-shard's local gradient flattened; the
+    shard_map performs the quantized reduction.  Used by tests and the
+    ZeRO-1 training mode.
+    """
+    n_shards = mesh.shape[axis_name]
+
+    def reduce_fn(g_stacked):
+        def local(g):
+            return compressed_psum_local(g[0], axis_name, n_shards, block)
+
+        return jax.shard_map(
+            local, mesh=mesh,
+            in_specs=P(axis_name, None),
+            out_specs=P(None),
+            check_vma=False,
+        )(g_stacked)
+
+    return jax.jit(reduce_fn)
+
+
+class ErrorFeedback:
+    """g_compressed = Q(g + e);  e' = (g + e) - Q(g + e)."""
+
+    @staticmethod
+    def init(params: PyTree) -> PyTree:
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    @staticmethod
+    def apply(grads: PyTree, err: PyTree, block: int = 2048
+              ) -> tuple[PyTree, PyTree]:
+        def one(g, e):
+            target = g.astype(jnp.float32) + e
+            flat = target.reshape(-1)
+            comp = compress_roundtrip(flat, block).reshape(g.shape)
+            return comp.astype(g.dtype), target - comp
+
+        out = jax.tree.map(one, grads, err)
+        istuple = lambda t: isinstance(t, tuple)
+        return (jax.tree.map(lambda t: t[0], out, is_leaf=istuple),
+                jax.tree.map(lambda t: t[1], out, is_leaf=istuple))

@@ -1,0 +1,27 @@
+import os
+
+# Tests run on the single real CPU device. (The 512-device override belongs
+# EXCLUSIVELY to launch/dryrun.py — never set it here.)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_blobs(n, n_features=4, seed=0, sep=2.5):
+    """Two-class Gaussian blobs — the workhorse synthetic SVM dataset."""
+    r = np.random.default_rng(seed)
+    half = n // 2
+    mu = np.zeros(n_features)
+    mu[0] = sep
+    xa = r.normal(size=(half, n_features)) + mu
+    xb = r.normal(size=(n - half, n_features)) - mu
+    x = np.concatenate([xa, xb]).astype(np.float32)
+    y = np.concatenate([np.ones(half), -np.ones(n - half)]).astype(np.float32)
+    p = r.permutation(n)
+    return x[p], y[p]

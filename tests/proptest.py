@@ -1,0 +1,44 @@
+"""Mini property-based testing harness (hypothesis is not installable in the
+offline container — DESIGN.md §6).  Seeded random case generation with
+shrink-free reporting: on failure the full case dict is in the assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Cases:
+    n_cases: int = 10
+    seed: int = 0
+
+    def draw(self, spec: dict[str, Callable[[np.random.Generator], Any]]):
+        """Yield dicts of drawn values, one per case."""
+        for i in range(self.n_cases):
+            rng = np.random.default_rng(self.seed * 7919 + i)
+            yield {k: fn(rng) for k, fn in spec.items()}
+
+
+def ints(lo, hi):
+    return lambda rng: int(rng.integers(lo, hi + 1))
+
+
+def floats(lo, hi, log=False):
+    if log:
+        return lambda rng: float(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+    return lambda rng: float(rng.uniform(lo, hi))
+
+
+def choice(*opts):
+    return lambda rng: opts[int(rng.integers(0, len(opts)))]
+
+
+def arrays(shape_fn, scale=1.0, dtype=np.float32):
+    def gen(rng):
+        shape = shape_fn(rng) if callable(shape_fn) else shape_fn
+        return (rng.normal(size=shape) * scale).astype(dtype)
+    return gen

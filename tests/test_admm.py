@@ -1,0 +1,111 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admm as admm_mod
+from repro.core.kernelfn import KernelSpec, gaussian_block_xla
+from tests.conftest import make_blobs
+
+
+def _dense_solver(k_mat, beta):
+    import jax.scipy.linalg as jsl
+
+    chol = jsl.cholesky(k_mat + beta * jnp.eye(k_mat.shape[0]), lower=True)
+    return lambda b: jsl.cho_solve((chol, True), b)
+
+
+def _dual_objective(k_mat, y, x):
+    yx = y * x
+    return 0.5 * yx @ (k_mat @ yx) - jnp.sum(x)
+
+
+def test_admm_converges_to_qp_solution():
+    """Long-run ADMM must match a scipy reference on a tiny QP."""
+    from scipy.optimize import minimize
+
+    x, y = make_blobs(48, n_features=2, seed=5)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    k_mat = gaussian_block_xla(xj, xj, 1.0)
+    c_val, beta = 1.0, 1.0
+    state, trace = admm_mod.admm_svm(
+        _dense_solver(k_mat, beta), yj, c_val, beta, max_it=2000
+    )
+    # scipy reference on the same dual QP
+    kn = np.asarray(k_mat)
+    yn = np.asarray(y)
+
+    def obj(a):
+        ya = yn * a
+        return 0.5 * ya @ kn @ ya - a.sum()
+
+    def grad(a):
+        return yn * (kn @ (yn * a)) - 1.0
+
+    cons = [dict(type="eq", fun=lambda a: yn @ a, jac=lambda a: yn)]
+    res = minimize(obj, np.zeros(48), jac=grad, bounds=[(0, c_val)] * 48,
+                   constraints=cons, method="SLSQP", options=dict(maxiter=500))
+    f_admm = float(_dual_objective(k_mat, yj, state.z))
+    f_ref = float(res.fun)
+    assert f_admm <= f_ref + 1e-2 * abs(f_ref) + 1e-3, (f_admm, f_ref)
+    # feasibility of the ADMM point
+    assert float(jnp.abs(yj @ state.z)) < 1e-2
+    assert float(state.z.min()) >= -1e-5
+    assert float(state.z.max()) <= c_val + 1e-5
+
+
+def test_admm_primal_residual_decreases():
+    x, y = make_blobs(128, seed=1)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    k_mat = gaussian_block_xla(xj, xj, 1.0)
+    _, trace = admm_mod.admm_svm(_dense_solver(k_mat, 10.0), yj, 1.0, 10.0,
+                                 max_it=50)
+    res = np.asarray(trace.primal_res)
+    assert res[-1] <= res.max()
+    assert res[-1] < 5e-2 * max(res.max(), 1e-8) or res[-1] < 1e-3
+
+
+def test_admm_feasibility_invariants():
+    """Property-style sweep: z always in box, final |yᵀx| small."""
+    for seed in range(4):
+        for beta in (1.0, 100.0):
+            x, y = make_blobs(96, seed=seed)
+            xj, yj = jnp.asarray(x), jnp.asarray(y)
+            k_mat = gaussian_block_xla(xj, xj, 1.0)
+            state, _ = admm_mod.admm_svm(
+                _dense_solver(k_mat, beta), yj, 2.0, beta, max_it=30
+            )
+            assert float(state.z.min()) >= 0.0
+            assert float(state.z.max()) <= 2.0 + 1e-6
+            # x-step maintains the equality constraint exactly (closed form)
+            assert float(jnp.abs(yj @ state.x)) < 1e-3
+
+
+def test_admm_vector_c_pins_padded_coords():
+    x, y = make_blobs(64, seed=2)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    k_mat = gaussian_block_xla(xj, xj, 1.0)
+    c_vec = jnp.concatenate([jnp.full(48, 1.0), jnp.zeros(16)])
+    state, _ = admm_mod.admm_svm(_dense_solver(k_mat, 10.0), yj, c_vec, 10.0,
+                                 max_it=20)
+    np.testing.assert_allclose(np.asarray(state.z[48:]), 0.0, atol=1e-7)
+
+
+def test_warm_start_stays_feasible_and_converges():
+    x, y = make_blobs(128, seed=3)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    k_mat = gaussian_block_xla(xj, xj, 1.0)
+    solver = _dense_solver(k_mat, 10.0)
+    s1, _ = admm_mod.admm_svm(solver, yj, 1.0, 10.0, max_it=10)
+    s2w, t2w = admm_mod.admm_svm(solver, yj, 1.2, 10.0, max_it=10,
+                                 z0=s1.z, mu0=s1.mu)
+    s2c, t2c = admm_mod.admm_svm(solver, yj, 1.2, 10.0, max_it=10)
+    # warm start must not hurt terminal convergence
+    assert float(t2w.primal_res[-1]) <= 2.0 * float(t2c.primal_res[-1]) + 1e-4
+    assert float(s2w.z.min()) >= 0.0 and float(s2w.z.max()) <= 1.2 + 1e-6
+
+
+def test_paper_beta_rule():
+    assert admm_mod.paper_beta(50_000) == 1e2
+    assert admm_mod.paper_beta(500_000) == 1e3
+    assert admm_mod.paper_beta(3_500_000) == 1e4

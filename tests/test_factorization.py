@@ -1,0 +1,105 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression, factorization, tree as tree_mod
+from repro.core.kernelfn import KernelSpec
+from tests.conftest import make_blobs
+
+
+def _hss(n=512, leaf=64, rank=24, h=1.0, seed=0):
+    x, _ = make_blobs(n, seed=seed)
+    t = tree_mod.build_tree(x, leaf_size=leaf)
+    xp = jnp.asarray(x[t.perm])
+    spec = KernelSpec(h=h)
+    hss = compression.compress(
+        xp, t, spec, compression.CompressionParams(rank=rank, n_near=32, n_far=32)
+    )
+    return hss
+
+
+@pytest.mark.parametrize("beta", [1.0, 10.0, 100.0])
+def test_solve_matches_dense(beta):
+    hss = _hss()
+    fac = factorization.factorize(hss, beta)
+    dense = hss.todense() + beta * jnp.eye(hss.n)
+    b = jnp.asarray(np.random.default_rng(0).normal(size=hss.n), jnp.float32)
+    x_hss = fac.solve(b)
+    x_dense = jnp.linalg.solve(dense, b)
+    rel = float(jnp.linalg.norm(x_hss - x_dense) / jnp.linalg.norm(x_dense))
+    assert rel < 1e-3, rel
+
+
+def test_solve_is_inverse_of_matvec():
+    hss = _hss(n=256, leaf=32, rank=16)
+    beta = 10.0
+    fac = factorization.factorize(hss, beta)
+    b = jnp.asarray(np.random.default_rng(1).normal(size=hss.n), jnp.float32)
+    x = fac.solve(b)
+    b_back = hss.matvec(x) + beta * x
+    rel = float(jnp.linalg.norm(b_back - b) / jnp.linalg.norm(b))
+    assert rel < 1e-3, rel
+
+
+def test_solve_mat_multiple_rhs():
+    hss = _hss(n=256, leaf=32, rank=16)
+    fac = factorization.factorize(hss, 5.0)
+    b = jnp.asarray(np.random.default_rng(2).normal(size=(256, 3)), jnp.float32)
+    xs = fac.solve_mat(b)
+    for j in range(3):
+        np.testing.assert_allclose(
+            np.asarray(xs[:, j]), np.asarray(fac.solve(b[:, j])),
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+def test_two_level_tree():
+    # K = 1: only leaves + root coupling — exercises the boundary case.
+    hss = _hss(n=128, leaf=64, rank=24)
+    assert hss.levels == 1
+    fac = factorization.factorize(hss, 2.0)
+    dense = hss.todense() + 2.0 * jnp.eye(128)
+    b = jnp.ones(128, jnp.float32)
+    rel = float(
+        jnp.linalg.norm(fac.solve(b) - jnp.linalg.solve(dense, b))
+        / jnp.linalg.norm(jnp.linalg.solve(dense, b))
+    )
+    assert rel < 1e-3
+
+
+def test_factorize_jits_and_caches():
+    """factorize + solve must be jittable (the paper's ADMM loop requirement)."""
+    hss = _hss(n=256, leaf=32, rank=16)
+    fac = factorization.factorize(hss, 7.0)
+
+    @jax.jit
+    def solve(b):
+        return fac.solve(b)
+
+    b = jnp.ones(256, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(solve(b)), np.asarray(fac.solve(b)), rtol=1e-5
+    )
+
+
+def test_woodbury_identity_lemma():
+    """The Gillman–Martinsson inversion lemma on random SPD data."""
+    rng = np.random.default_rng(3)
+    m, r = 24, 6
+    d = rng.normal(size=(m, m))
+    d = jnp.asarray(d @ d.T + m * np.eye(m), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+    a_tilde = rng.normal(size=(r, r))
+    a_tilde = jnp.asarray(a_tilde + a_tilde.T, jnp.float32)
+    a_full = d + u @ a_tilde @ u.T
+
+    dinv = jnp.linalg.inv(d)
+    d_hat = jnp.linalg.inv(u.T @ dinv @ u)
+    e = dinv @ u @ d_hat
+    g = dinv - e @ (dinv @ u).T
+    a_inv_lemma = g + e @ jnp.linalg.inv(a_tilde + d_hat) @ e.T
+    np.testing.assert_allclose(
+        np.asarray(a_inv_lemma), np.asarray(jnp.linalg.inv(a_full)),
+        rtol=5e-3, atol=5e-4,
+    )

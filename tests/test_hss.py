@@ -1,0 +1,95 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression, tree as tree_mod
+from repro.core.kernelfn import KernelSpec, gaussian_block_xla
+from tests.conftest import make_blobs
+
+
+def _build(n=512, leaf=64, rank=32, h=1.0, seed=0, n_features=4,
+           n_near=64, n_far=128):
+    x, y = make_blobs(n, n_features=n_features, seed=seed)
+    t = tree_mod.build_tree(x, leaf_size=leaf)
+    xp = jnp.asarray(x[t.perm])
+    spec = KernelSpec(h=h)
+    params = compression.CompressionParams(
+        rank=rank, n_near=n_near, n_far=n_far, seed=seed)
+    hss = compression.compress(xp, t, spec, params)
+    k_dense = gaussian_block_xla(xp, xp, h)
+    return hss, k_dense, xp, spec
+
+
+def test_dense_reconstruction_error_small():
+    hss, k_dense, _, _ = _build()
+    rec = hss.todense()
+    err = float(jnp.linalg.norm(rec - k_dense) / jnp.linalg.norm(k_dense))
+    assert err < 6e-2, err
+
+
+def test_rank_increases_accuracy():
+    errs = []
+    for rank in (8, 24, 48):
+        hss, k_dense, _, _ = _build(rank=rank)
+        rec = hss.todense()
+        errs.append(float(jnp.linalg.norm(rec - k_dense) / jnp.linalg.norm(k_dense)))
+    assert errs[0] > errs[1] > errs[2] or errs[2] < 1e-3
+
+
+def test_matvec_matches_todense():
+    hss, _, _, _ = _build(n=256, leaf=32, rank=16)
+    v = jnp.asarray(np.random.default_rng(0).normal(size=256), jnp.float32)
+    dense = hss.todense()
+    np.testing.assert_allclose(
+        np.asarray(hss.matvec(v)), np.asarray(dense @ v), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_matvec_against_exact_kernel():
+    hss, k_dense, _, _ = _build()
+    v = jnp.asarray(np.random.default_rng(1).normal(size=hss.n), jnp.float32)
+    approx = hss.matvec(v)
+    exact = k_dense @ v
+    rel = float(jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact))
+    assert rel < 8e-2, rel
+
+
+def test_matmat():
+    hss, _, _, _ = _build(n=256, leaf=32, rank=16)
+    v = jnp.asarray(np.random.default_rng(2).normal(size=(256, 3)), jnp.float32)
+    out = hss.matmat(v)
+    for j in range(3):
+        np.testing.assert_allclose(
+            np.asarray(out[:, j]), np.asarray(hss.matvec(v[:, j])),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+def test_shifted_adds_identity():
+    hss, _, _, _ = _build(n=256, leaf=32, rank=16)
+    v = jnp.ones(256, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(hss.shifted(3.0).matvec(v)),
+        np.asarray(hss.matvec(v) + 3.0 * v),
+        rtol=1e-5,
+    )
+
+
+def test_symmetry_of_reconstruction():
+    hss, _, _, _ = _build(n=256, leaf=32, rank=16)
+    d = np.asarray(hss.todense())
+    np.testing.assert_allclose(d, d.T, atol=1e-5)
+
+
+def test_memory_linear_in_n():
+    hss_small, _, _, _ = _build(n=256, leaf=32, rank=16)
+    hss_big, _, _, _ = _build(n=1024, leaf=32, rank=16)
+    ratio = hss_big.memory_bytes() / hss_small.memory_bytes()
+    assert ratio < 5.0  # O(N r): 4x data -> ~4x memory, NOT 16x (dense)
+
+
+def test_compression_error_probe():
+    hss, k_dense, xp, spec = _build()
+    err = float(compression.compression_error(hss, spec, n_probe=4))
+    assert err < 8e-2

@@ -1,0 +1,78 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention import ops as attn_ops
+from repro.kernels.attention.ref import attention_ref
+
+
+def _qkv(b=1, h=4, hkv=2, s=128, d=32, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)) * 0.5, dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)) * 0.5, dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)) * 0.5, dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(causal=True, window=None, softcap=0.0),
+    dict(causal=True, window=32, softcap=0.0),
+    dict(causal=True, window=None, softcap=30.0),
+    dict(causal=False, window=None, softcap=0.0),   # encoder (hubert)
+    dict(causal=True, window=16, softcap=50.0),     # gemma2-style local
+])
+def test_flash_matches_ref(cfg):
+    q, k, v = _qkv()
+    out = attn_ops.fused_attention(q, k, v, interpret=True, **cfg)
+    ref = attention_ref(q, k, v, **cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [
+    dict(b=2, h=2, hkv=1, s=64, d=16),    # MQA
+    dict(b=1, h=8, hkv=8, s=64, d=64),    # MHA
+    dict(b=1, h=6, hkv=2, s=96, d=32),    # GQA, non-pow2 seq
+])
+def test_flash_gqa_shapes(shape):
+    q, k, v = _qkv(**shape)
+    out = attn_ops.fused_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(dtype=jnp.bfloat16)
+    out = attn_ops.fused_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=0.05, atol=0.05)
+
+
+def test_causality_property():
+    """Perturbing a future token must not change past outputs."""
+    q, k, v = _qkv(b=1, h=2, hkv=2, s=64, d=16)
+    out1 = attn_ops.fused_attention(q, k, v, causal=True, interpret=True)
+    k2 = k.at[:, :, -1].add(10.0)
+    v2 = v.at[:, :, -1].add(10.0)
+    out2 = attn_ops.fused_attention(q, k2, v2, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :-1]),
+                               np.asarray(out2[:, :, :-1]), atol=1e-5)
+
+
+def test_window_property():
+    """With window w, token i must ignore keys j <= i-w."""
+    q, k, v = _qkv(b=1, h=2, hkv=2, s=64, d=16)
+    w = 8
+    out1 = attn_ops.fused_attention(q, k, v, causal=True, window=w,
+                                    interpret=True)
+    # perturb keys far in the past of the last query
+    k2 = k.at[:, :, :32].add(5.0)
+    v2 = v.at[:, :, :32].add(5.0)
+    out2 = attn_ops.fused_attention(q, k2, v2, causal=True, window=w,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :, -8:]),
+                               np.asarray(out2[:, :, -8:]), atol=1e-5)

@@ -1,0 +1,52 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gaussian import ops as gops
+from repro.kernels.gaussian.ref import gaussian_block_ref
+
+
+@pytest.mark.parametrize("ma,mb,f", [
+    (64, 64, 4), (128, 96, 8), (100, 130, 3), (256, 256, 128), (33, 257, 22),
+])
+@pytest.mark.parametrize("h", [0.5, 1.0, 10.0])
+def test_gaussian_block_matches_ref(ma, mb, f, h):
+    rng = np.random.default_rng(ma * mb + f)
+    xa = jnp.asarray(rng.normal(size=(ma, f)), jnp.float32)
+    xb = jnp.asarray(rng.normal(size=(mb, f)), jnp.float32)
+    out = gops.gaussian_block(xa, xb, h, interpret=True)
+    ref = gaussian_block_ref(xa, xb, h)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_gaussian_block_bf16():
+    rng = np.random.default_rng(0)
+    xa = jnp.asarray(rng.normal(size=(64, 8)), jnp.bfloat16)
+    xb = jnp.asarray(rng.normal(size=(64, 8)), jnp.bfloat16)
+    out = gops.gaussian_block(xa, xb, 1.0, interpret=True)
+    ref = gaussian_block_ref(xa.astype(jnp.float32), xb.astype(jnp.float32), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref), rtol=0.05, atol=0.05)
+
+
+def test_gaussian_symmetry_and_diag():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(96, 5)), jnp.float32)
+    out = np.asarray(gops.gaussian_block(x, x, 2.0, interpret=True))
+    np.testing.assert_allclose(out, out.T, atol=1e-6)
+    np.testing.assert_allclose(np.diag(out), 1.0, atol=1e-6)
+
+
+def test_core_dispatch_pallas_interpret():
+    """KernelSpec(impl='pallas_interpret') must route through the kernel."""
+    from repro.core.kernelfn import KernelSpec, kernel_block
+
+    rng = np.random.default_rng(2)
+    xa = jnp.asarray(rng.normal(size=(40, 6)), jnp.float32)
+    xb = jnp.asarray(rng.normal(size=(52, 6)), jnp.float32)
+    out = kernel_block(KernelSpec(h=1.5, impl="pallas_interpret"), xa, xb)
+    ref = kernel_block(KernelSpec(h=1.5, impl="xla"), xa, xb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)

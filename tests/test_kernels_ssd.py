@@ -1,0 +1,77 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd import ops as sops
+from repro.kernels.ssd import ref as sref
+
+
+def _inputs(b=2, s=64, h=4, p=16, g=2, n=8, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), dtype)
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, s, h))) * 0.1 + 0.01, dtype)
+    a = jnp.asarray(-np.abs(rng.normal(size=h)) - 0.1, dtype)
+    b_mat = jnp.asarray(rng.normal(size=(b, s, g, n)) * 0.3, dtype)
+    c_mat = jnp.asarray(rng.normal(size=(b, s, g, n)) * 0.3, dtype)
+    d_vec = jnp.asarray(rng.normal(size=h) * 0.1, dtype)
+    return x, dt, a, b_mat, c_mat, d_vec
+
+
+def test_chunked_ref_matches_scan_ref():
+    """The semiseparable chunked evaluation == exact recurrence."""
+    rng = np.random.default_rng(1)
+    s, p, n = 64, 8, 4
+    x = jnp.asarray(rng.normal(size=(s, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=s)) * 0.1 + 0.01, jnp.float32)
+    a = -0.5
+    b_mat = jnp.asarray(rng.normal(size=(s, n)) * 0.3, jnp.float32)
+    c_mat = jnp.asarray(rng.normal(size=(s, n)) * 0.3, jnp.float32)
+    y_scan, h_scan = sref.ssd_scan_ref(x, dt, a, b_mat, c_mat, 0.1)
+    for chunk in (8, 16, 32):
+        y_chunk, h_chunk = sref.ssd_chunked_ref(x, dt, a, b_mat, c_mat, 0.1,
+                                                chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_scan),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_scan),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [
+    dict(b=1, s=32, h=2, p=8, g=1, n=4, chunk=8),
+    dict(b=2, s=64, h=4, p=16, g=2, n=8, chunk=16),
+    dict(b=1, s=128, h=2, p=32, g=2, n=16, chunk=32),
+])
+def test_pallas_matches_ref(shape):
+    chunk = shape.pop("chunk")
+    x, dt, a, b_mat, c_mat, d_vec = _inputs(**shape)
+    y_k = sops.ssd_forward(x, dt, a, b_mat, c_mat, d_vec, chunk=chunk,
+                           interpret=True, use_pallas=True)
+    y_r = sops.ssd_forward(x, dt, a, b_mat, c_mat, d_vec, chunk=chunk,
+                           use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_state_resets_between_sequences():
+    """Batch elements must not leak state into each other (scratch reset)."""
+    x, dt, a, b_mat, c_mat, d_vec = _inputs(b=2, s=32, h=2, p=8, g=1, n=4)
+    y_batch = sops.ssd_forward(x, dt, a, b_mat, c_mat, d_vec, chunk=8,
+                               interpret=True)
+    y_single = sops.ssd_forward(x[1:], dt[1:], a, b_mat[1:], c_mat[1:], d_vec,
+                                chunk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_batch[1]), np.asarray(y_single[0]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_decay_long_range_forgetting():
+    """Strong decay ⇒ early tokens cannot influence late outputs."""
+    x, dt, a, b_mat, c_mat, d_vec = _inputs(b=1, s=64, h=2, p=8, g=1, n=4)
+    a_strong = jnp.full_like(a, -50.0)
+    y1 = sops.ssd_forward(x, dt, a_strong, b_mat, c_mat, d_vec, chunk=16,
+                          interpret=True)
+    x2 = x.at[:, :8].set(0.0)
+    y2 = sops.ssd_forward(x2, dt, a_strong, b_mat, c_mat, d_vec, chunk=16,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(y1[:, -16:]), np.asarray(y2[:, -16:]),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,140 @@
+"""Property-based tests of the system's invariants (see tests/proptest.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admm as admm_mod
+from repro.core import compression, factorization, tree as tree_mod
+from repro.core.kernelfn import KernelSpec, gaussian_block_xla
+from tests import proptest as pt
+
+
+def test_property_shifted_kernel_spd():
+    """K̃ + beta I stays SPD for all sampled (h, beta, data) — the property
+    the Cholesky leaf factorization relies on."""
+    for case in pt.Cases(n_cases=6, seed=1).draw(dict(
+            h=pt.floats(0.3, 10.0, log=True),
+            beta=pt.floats(1.0, 1e4, log=True),
+            n_feat=pt.ints(2, 8),
+            x=pt.arrays(lambda rng: (256, int(rng.integers(2, 9)))))):
+        x = case["x"][:, :case["n_feat"]]
+        t = tree_mod.build_tree(x, leaf_size=64)
+        xp = jnp.asarray(x[t.perm])
+        hss = compression.compress(
+            xp, t, KernelSpec(h=case["h"]),
+            compression.CompressionParams(rank=16, n_near=24, n_far=24))
+        dense = np.asarray(hss.todense()) + case["beta"] * np.eye(256)
+        evals = np.linalg.eigvalsh(dense)
+        assert evals.min() > 0, case
+
+
+def test_property_tree_permutation_equivariance():
+    """Shuffling input rows must not change the (sorted) leaf contents."""
+    for case in pt.Cases(n_cases=5, seed=2).draw(dict(
+            x=pt.arrays((128, 3)), perm_seed=pt.ints(0, 1000))):
+        x = case["x"]
+        rng = np.random.default_rng(case["perm_seed"])
+        p = rng.permutation(len(x))
+        t1 = tree_mod.build_tree(x, leaf_size=32)
+        t2 = tree_mod.build_tree(x[p], leaf_size=32)
+        a = np.sort(x[t1.perm].reshape(4, 32, 3).sum(axis=1), axis=0)
+        b = np.sort(x[p][t2.perm].reshape(4, 32, 3).sum(axis=1), axis=0)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_property_skeletons_subset_of_node():
+    """Every node's skeleton indices must lie inside the node's span."""
+    for case in pt.Cases(n_cases=4, seed=3).draw(dict(
+            x=pt.arrays((256, 4)))):
+        t = tree_mod.build_tree(case["x"], leaf_size=64)
+        xp = jnp.asarray(case["x"][t.perm])
+        hss = compression.compress(
+            xp, t, KernelSpec(h=1.0),
+            compression.CompressionParams(rank=16, n_near=24, n_far=24))
+        skel = np.asarray(hss.skel_leaf)
+        for leaf in range(hss.n_leaves):
+            lo, hi = leaf * 64, (leaf + 1) * 64
+            assert ((skel[leaf] >= lo) & (skel[leaf] < hi)).all()
+        for k, sk in enumerate(hss.skels, start=1):
+            width = 64 * 2 ** k
+            sk = np.asarray(sk)
+            for node in range(sk.shape[0]):
+                lo, hi = node * width, (node + 1) * width
+                assert ((sk[node] >= lo) & (sk[node] < hi)).all()
+
+
+def test_property_solve_residual_small_across_betas():
+    for case in pt.Cases(n_cases=5, seed=4).draw(dict(
+            beta=pt.floats(1.0, 1e3, log=True),
+            x=pt.arrays((256, 4)), b=pt.arrays((256,)))):
+        t = tree_mod.build_tree(case["x"], leaf_size=64)
+        xp = jnp.asarray(case["x"][t.perm])
+        hss = compression.compress(
+            xp, t, KernelSpec(h=1.0),
+            compression.CompressionParams(rank=24, n_near=32, n_far=48))
+        fac = factorization.factorize(hss, case["beta"])
+        b = jnp.asarray(case["b"])
+        xsol = fac.solve(b)
+        resid = hss.matvec(xsol) + case["beta"] * xsol - b
+        rel = float(jnp.linalg.norm(resid) / jnp.linalg.norm(b))
+        assert rel < 1e-3, (rel, case["beta"])
+
+
+def test_property_admm_iterates_feasible():
+    """For all sampled (beta, C): z in box, |yᵀx| ~ 0 after every run."""
+    for case in pt.Cases(n_cases=5, seed=5).draw(dict(
+            beta=pt.floats(1.0, 300.0, log=True),
+            c=pt.floats(0.1, 10.0, log=True),
+            x=pt.arrays((96, 3)), labels=pt.arrays((96,)))):
+        import jax.scipy.linalg as jsl
+        xj = jnp.asarray(case["x"])
+        y = jnp.sign(jnp.asarray(case["labels"]) + 1e-9)
+        k_mat = gaussian_block_xla(xj, xj, 1.0)
+        chol = jsl.cholesky(k_mat + case["beta"] * jnp.eye(96), lower=True)
+        state, _ = admm_mod.admm_svm(
+            lambda b: jsl.cho_solve((chol, True), b), y, case["c"],
+            case["beta"], max_it=15)
+        assert float(state.z.min()) >= 0
+        assert float(state.z.max()) <= case["c"] + 1e-5
+        assert float(jnp.abs(y @ state.x)) < 1e-2 * 96, case
+
+
+def test_property_rope_norm_preserving():
+    """RoPE is a rotation: per-head vector norms are invariant."""
+    from repro.models.layers import apply_rope
+
+    for case in pt.Cases(n_cases=5, seed=6).draw(dict(
+            x=pt.arrays((2, 16, 4, 32)), theta=pt.floats(1e3, 1e6, log=True))):
+        x = jnp.asarray(case["x"])
+        pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+        out = apply_rope(x, pos, case["theta"])
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(out), axis=-1),
+            np.linalg.norm(case["x"], axis=-1), rtol=2e-4, atol=1e-5)
+
+
+def test_property_moe_capacity_drop_bounded():
+    """MoE output differs from unlimited-capacity only on dropped tokens;
+    total routed weight never exceeds 1 per token."""
+    from repro.models.layers import MoEParams, moe_block
+
+    for case in pt.Cases(n_cases=3, seed=7).draw(dict(
+            seed=pt.ints(0, 99), e=pt.choice(4, 8), k=pt.choice(1, 2))):
+        rng = np.random.default_rng(case["seed"])
+        e, k, d, bsz, s = case["e"], case["k"], 16, 2, 32
+        p = MoEParams(
+            router=jnp.asarray(rng.normal(size=(d, e)) * 0.1, jnp.float32),
+            w_gate=jnp.asarray(rng.normal(size=(e, d, 32)) * 0.1, jnp.float32),
+            w_up=jnp.asarray(rng.normal(size=(e, d, 32)) * 0.1, jnp.float32),
+            w_down=jnp.asarray(rng.normal(size=(e, 32, d)) * 0.1, jnp.float32),
+        )
+        x = jnp.asarray(rng.normal(size=(bsz, s, d)), jnp.float32)
+        out_small, _ = moe_block(x, p, k, capacity_factor=0.5)
+        out_big, _ = moe_block(x, p, k, capacity_factor=1e9)
+        # capped-capacity output is a "partial" version: where it differs it
+        # must be strictly smaller in magnitude (dropped contributions)
+        n_small = float(jnp.linalg.norm(out_small))
+        n_big = float(jnp.linalg.norm(out_big))
+        assert n_small <= n_big * 1.05 + 1e-6
+        assert jnp.all(jnp.isfinite(out_small))

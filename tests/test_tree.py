@@ -1,0 +1,55 @@
+import numpy as np
+import pytest
+
+from repro.core import tree as tree_mod
+
+
+def test_build_tree_perm_is_permutation():
+    r = np.random.default_rng(1)
+    x = r.normal(size=(512, 3)).astype(np.float32)
+    t = tree_mod.build_tree(x, leaf_size=64)
+    assert t.levels == 3
+    assert sorted(t.perm.tolist()) == list(range(512))
+    inv = t.inverse_perm()
+    assert np.all(t.perm[inv] == np.arange(512))
+
+
+def test_tree_clusters_are_spatially_tight():
+    # A tree on two widely separated blobs must not split any leaf across them.
+    r = np.random.default_rng(2)
+    xa = r.normal(size=(128, 2)) + np.array([100.0, 0.0])
+    xb = r.normal(size=(128, 2)) - np.array([100.0, 0.0])
+    x = np.concatenate([xa, xb]).astype(np.float32)
+    t = tree_mod.build_tree(x, leaf_size=32)
+    xp = x[t.perm]
+    for s in tree_mod.leaf_slices(t):
+        leaf = xp[s]
+        assert leaf[:, 0].max() - leaf[:, 0].min() < 50.0
+
+
+def test_pad_dataset_inert():
+    r = np.random.default_rng(3)
+    x = r.normal(size=(100, 3)).astype(np.float32)
+    y = np.sign(r.normal(size=100)).astype(np.float32)
+    xp, yp, mask, levels = tree_mod.pad_dataset(x, y, leaf_size=32)
+    assert xp.shape[0] == 32 * 2 ** levels >= 100
+    assert mask.sum() == 100
+    # pads are far from data AND from each other
+    pads = xp[~mask]
+    if len(pads) >= 2:
+        d = np.linalg.norm(pads[0] - pads[1])
+        assert d > 100.0
+    d_data = np.linalg.norm(pads[0] - x, axis=1).min()
+    assert d_data > 100.0
+
+
+def test_padded_size():
+    assert tree_mod.padded_size(100, 32) == (128, 2)
+    assert tree_mod.padded_size(128, 32) == (128, 2)
+    assert tree_mod.padded_size(129, 32) == (256, 3)
+
+
+def test_build_tree_rejects_bad_n():
+    x = np.zeros((100, 2), np.float32)
+    with pytest.raises(ValueError):
+        tree_mod.build_tree(x, leaf_size=32, levels=2)
