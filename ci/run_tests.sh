@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite with 8 emulated host devices.
+#
+# The distribution-layer tests (tests/test_dist.py, tests/test_fault.py,
+# tests/test_pipeline.py, ...) spawn subprocesses that set
+# --xla_force_host_platform_device_count=8 themselves; exporting it here
+# also covers any in-process multi-device path and keeps the dist tests
+# green on single-accelerator CI runners.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"

@@ -184,4 +184,13 @@ class CheckpointManager:
 
     def restore(self, template: PyTree, shardings: PyTree | None = None,
                 step: int | None = None):
+        # Drain any in-flight async save first: a restart immediately after
+        # a failure must see the just-written checkpoint, not miss it while
+        # the worker thread is still renaming <dir>.tmp into place.  A
+        # FAILED save must not kill the recovery path though — the latest
+        # complete checkpoint on disk is still valid, so the stored error
+        # is left for the next wait() call instead of raised here.
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
         return load_checkpoint(self.directory, template, step, shardings)

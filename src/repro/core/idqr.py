@@ -57,20 +57,31 @@ def cpqr_select(m_mat: Array, k: int) -> tuple[Array, Array]:
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def interp_decomp(m_mat: Array, k: int, ridge: float = 1e-7) -> tuple[Array, Array]:
+def interp_decomp(m_mat: Array, k: int, rtol: float = 1e-5) -> tuple[Array, Array]:
     """Column ID:  M ≈ M[:, J] @ T  with  T[:, J] = I_k.
 
-    T solved from ridge-regularized normal equations on the skeleton columns
-    (robust when the numerical rank of M is below k, which happens by design
-    — the HSS rank is a static cap, cf. hss_max_rank in the paper).
+    T comes from the triangular factor of the pivoted QR: with Q from
+    cpqr_select, R = QᵀM and R_J = Qᵀ M[:, J] is (numerically) upper
+    triangular in pivot order, so T = R_J⁻¹ R.  When the numerical rank of M
+    is below k — which happens by design, the HSS rank is a static cap (cf.
+    hss_max_rank in the paper), and for leaves made of inert padding points —
+    the trailing R_J diagonal entries underflow and a raw solve yields
+    NaN/garbage.  Rows whose diagonal falls below ``rtol * max|diag|`` are
+    truncated: their basis directions carry no signal, so dropping them gives
+    the best-available rank-r interpolation instead of amplified noise.
     """
-    piv, _ = cpqr_select(m_mat, k)
-    mj = jnp.take(m_mat, piv, axis=1)  # (s, k)
-    gram = mj.T @ mj
-    # Absolute floor keeps the solve finite for (near-)zero blocks, which
-    # legitimately occur for leaves made of inert padding points.
-    lam = ridge * (jnp.trace(gram) / k) + 1e-10
-    t_full = jnp.linalg.solve(gram + lam * jnp.eye(k, dtype=m_mat.dtype), mj.T @ m_mat)
+    piv, qs = cpqr_select(m_mat, k)
+    r_full = qs.T @ m_mat                                   # (k, n)
+    r_skel = jnp.triu(jnp.take(r_full, piv, axis=1))        # (k, k) upper-tri
+    diag = jnp.diagonal(r_skel)
+    tol = rtol * jnp.maximum(jnp.max(jnp.abs(diag)), 1e-30)
+    keep = jnp.abs(diag) > tol
+    # Truncate rank-deficient directions: unit diagonal + zeroed row makes
+    # the triangular solve exact and finite for the dropped rows.
+    r_safe = jnp.where(keep[:, None], r_skel, 0.0) + jnp.diag(
+        jnp.where(keep, 0.0, 1.0).astype(m_mat.dtype))
+    rhs = jnp.where(keep[:, None], r_full, 0.0)
+    t_full = jax.scipy.linalg.solve_triangular(r_safe, rhs, lower=False)
     # Enforce exact identity on skeleton columns.
     t_full = t_full.at[:, piv].set(jnp.eye(k, dtype=m_mat.dtype))
     return piv, t_full

@@ -1,0 +1,139 @@
+"""Mesh context + logical-axis resolution + activation-sharding hints.
+
+Model code names LOGICAL axes ("data", "model", "stage"); this module maps
+them onto whatever mesh is active.  The "data" logical axis composes the
+"pod" and "data" mesh axes when both exist (multi-pod batch/FSDP sharding —
+see launch.mesh), so the same constrain() calls serve the 16x16 single-pod
+and 2x16x16 multi-pod meshes unchanged.
+
+Outside a ``use_mesh`` context every hint is a no-op — single-device smoke
+tests run the exact same model code as the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# logical axis -> candidate mesh axes, in composition (major-to-minor) order
+_LOGICAL_AXES = {
+    "data": ("pod", "data"),
+    "model": ("model",),
+    "stage": ("stage",),
+}
+
+_state = threading.local()
+
+
+def _translation(mesh: Mesh) -> dict[str, Any]:
+    """Logical name -> mesh axis name (or tuple of names when composed)."""
+    present = set(mesh.axis_names)
+    tr: dict[str, Any] = {}
+    for logical, cands in _LOGICAL_AXES.items():
+        axes = tuple(a for a in cands if a in present)
+        if axes:
+            tr[logical] = axes[0] if len(axes) == 1 else axes
+    return tr
+
+
+def _current() -> tuple[Mesh, dict[str, Any]] | None:
+    """The active (mesh, logical-axis translation), or None outside."""
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Activate ``mesh`` for constrain()/resolve_spec() in this thread.
+
+    Composes with jax's own mesh context: ``with use_mesh(mesh), mesh:``.
+    """
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, _translation(mesh))
+    try:
+        yield mesh
+    finally:
+        _state.ctx = prev
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_spec(spec: tuple, shape: tuple) -> tuple:
+    """Map a logical spec onto the active mesh with divisibility fallback.
+
+    Per dimension: the logical entry resolves to its mesh axes; axes are
+    dropped (major first) until the dimension extent divides the remaining
+    axes' total size, degrading to None (replicated) when nothing fits.
+    An entry naming a mesh axis directly passes through the same check.
+    Unknown entries and all entries outside a mesh context resolve to None.
+    """
+    ctx = _current()
+    if ctx is None:
+        return tuple(None for _ in spec)
+    mesh, tr = ctx
+    present = set(mesh.axis_names)
+    out: list[Any] = []
+    used: set[str] = set()
+    for entry, dim in zip(spec, shape):
+        if entry is None:
+            out.append(None)
+            continue
+        mapped = tr.get(entry, entry if entry in present else None)
+        if mapped is None:
+            out.append(None)
+            continue
+        axes = mapped if isinstance(mapped, tuple) else (mapped,)
+        axes = tuple(a for a in axes if a not in used)
+        while axes and (dim % _axes_size(mesh, axes) or dim == 0):
+            axes = axes[1:]                 # drop the major axis, try again
+        if not axes:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    return tuple(out)
+
+
+def constrain(x: jax.Array, spec: tuple) -> jax.Array:
+    """Sharding hint: with_sharding_constraint under an active mesh, else id.
+
+    ``spec`` names logical axes; entries that don't resolve (axis absent
+    from the mesh, or extent not divisible) fall back to replicated for
+    that dimension, so the hint never fails on small/debug meshes.
+    """
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    resolved = resolve_spec(spec, x.shape)
+    if all(e is None for e in resolved):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*resolved)))
+
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs, check_vma: bool = False):
+    """Version-compatible shard_map.
+
+    jax renamed the replication-check kwarg (check_rep -> check_vma) and
+    moved shard_map out of jax.experimental across releases; callers in
+    repro.models go through this shim so both API generations work.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        except TypeError:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+    from jax.experimental.shard_map import shard_map as sm_exp
+    return sm_exp(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)

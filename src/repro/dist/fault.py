@@ -1,0 +1,170 @@
+"""Fault tolerance for long training runs.
+
+Three pieces, composed by launch.train:
+
+  StepGuard     — runs each step under a wall-clock deadline (hung
+                  collectives / dead hosts surface as StepTimeout instead of
+                  an infinite hang) and flags straggler steps whose duration
+                  exceeds ``straggler_ratio`` x the median of prior steps.
+  FailureInjector — deterministic failure drills: raises InjectedFailure the
+                  FIRST time each configured step is reached, so restart
+                  paths are exercised in CI, not discovered in production.
+  run_resilient — the restart loop: build (or restore) state, run steps under
+                  the guard, checkpoint every ``ckpt_every`` steps, and on
+                  any step failure restore from the latest checkpoint and
+                  replay — steps are neither lost nor double-counted because
+                  the checkpoint records the count of COMPLETED steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import threading
+import time
+from typing import Any, Callable
+
+
+class StepTimeout(RuntimeError):
+    """A guarded step exceeded its wall-clock deadline."""
+
+
+class InjectedFailure(RuntimeError):
+    """Deterministic drill failure from FailureInjector."""
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration_s: float
+    median_s: float
+
+    @property
+    def ratio(self) -> float:
+        return self.duration_s / max(self.median_s, 1e-12)
+
+
+class StepGuard:
+    """Deadline + straggler detection around a single step callable.
+
+    The deadline is enforced by running the step on a daemon thread and
+    abandoning it on timeout — Python offers no safe preemption, so a
+    timed-out step may still be executing (e.g. blocked in a collective)
+    while the caller restarts.  That matches the intended use: after a
+    StepTimeout the surviving hosts are torn down / re-initialized, not
+    reused concurrently with the zombie step.
+    """
+
+    def __init__(self, deadline_s: float, straggler_ratio: float | None = None):
+        self.deadline_s = deadline_s
+        self.straggler_ratio = straggler_ratio
+        self.durations: list[float] = []
+        self.stragglers: list[StragglerEvent] = []
+
+    def run(self, step_no: int, fn: Callable[[], Any]) -> Any:
+        from repro.dist import api as dist_api
+
+        box: dict[str, Any] = {}
+        errs: list[BaseException] = []
+        # use_mesh state is thread-local; re-enter the caller's mesh context
+        # on the worker thread so constrain()/resolve_spec() inside the step
+        # still see it
+        ctx = dist_api._current()
+
+        def target():
+            try:
+                if ctx is not None:
+                    with dist_api.use_mesh(ctx[0]):
+                        box["value"] = fn()
+                else:
+                    box["value"] = fn()
+            except BaseException as e:   # noqa: BLE001 — re-raised below
+                errs.append(e)
+
+        t0 = time.perf_counter()
+        worker = threading.Thread(target=target, daemon=True)
+        worker.start()
+        worker.join(self.deadline_s)
+        if worker.is_alive():
+            raise StepTimeout(
+                f"step {step_no} exceeded deadline of {self.deadline_s}s")
+        if errs:
+            raise errs[0]
+        dur = time.perf_counter() - t0
+        if self.straggler_ratio is not None and self.durations:
+            med = statistics.median(self.durations)
+            if med > 0 and dur > self.straggler_ratio * med:
+                self.stragglers.append(StragglerEvent(step_no, dur, med))
+        self.durations.append(dur)
+        return box["value"]
+
+
+class FailureInjector:
+    """Raises InjectedFailure the first time each configured step runs."""
+
+    def __init__(self, fail_at: tuple[int, ...] = ()):
+        self.fail_at = set(fail_at)
+        self._fired: set[int] = set()
+
+    def check(self, step_no: int) -> None:
+        if step_no in self.fail_at and step_no not in self._fired:
+            self._fired.add(step_no)
+            raise InjectedFailure(f"injected failure at step {step_no}")
+
+
+def run_resilient(
+    n_steps: int,
+    build: Callable[[], Any],
+    step: Callable[[Any, int], Any],
+    save: Callable[[Any, int], None],
+    restore: Callable[[], tuple[Any, int] | None],
+    *,
+    ckpt_every: int = 0,
+    max_restarts: int = 3,
+    guard: StepGuard | None = None,
+) -> tuple[Any, dict]:
+    """Run ``n_steps`` steps with checkpoint-resume on failure.
+
+    ``save(state, k)`` / ``restore() -> (state, k)`` use k = the number of
+    COMPLETED steps, so a replay resumes at exactly step k.  On failure the
+    run restores (falling back to a fresh build when no checkpoint exists)
+    and replays; after ``max_restarts`` restarts the failure propagates.
+    Returns (final_state, report) with restart/straggler counts.
+    """
+    restarts = 0
+
+    def load() -> tuple[Any, int]:
+        got = restore()
+        if got is None:
+            return build(), 0
+        return got
+
+    state, i = load()
+    while i < n_steps:
+        try:
+            if guard is not None:
+                state = guard.run(i, lambda: step(state, i))
+            else:
+                state = step(state, i)
+            # the periodic save shares the restart budget: a transient
+            # checkpoint-write failure restores and replays instead of
+            # aborting a run with restarts to spare
+            if ckpt_every and (i + 1) % ckpt_every == 0:
+                save(state, i + 1)
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            state, i = load()
+            continue
+        i += 1
+    report = dict(
+        restarts=restarts,
+        stragglers=list(guard.stragglers) if guard is not None else [],
+    )
+    try:
+        save(state, n_steps)
+    except Exception as e:   # noqa: BLE001 — surfaced, not fatal
+        # the run IS complete; a failed final checkpoint must not discard
+        # the computed state, so it is reported instead of raised
+        report["final_save_error"] = repr(e)
+    return state, report

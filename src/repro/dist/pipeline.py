@@ -1,0 +1,71 @@
+"""GPipe-style pipeline parallelism over a "stage" mesh axis.
+
+``pipeline_forward`` runs a per-stage function over microbatches with the
+classic fill/steady/drain schedule: at tick t, stage s processes microbatch
+t - s; activations move one stage per tick via collective_permute.  Stage
+parameters are sharded on the stage axis (each device holds ONE stage's
+weights), microbatches are replicated in, and outputs come back replicated —
+numerically identical to applying the stages sequentially, which is exactly
+what tests/test_pipeline.py asserts.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.api import shard_map
+
+
+def pipeline_forward(
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    params: Any,
+    x: jax.Array,
+    mesh: Mesh,
+    axis: str = "stage",
+) -> jax.Array:
+    """Run ``n_stages`` chained applications of ``stage_fn`` as a pipeline.
+
+    params — pytree whose leaves lead with the stage axis (n_stages, ...);
+    x      — microbatched input (n_micro, microbatch, ...);
+    returns the (n_micro, microbatch, ...) output of the final stage.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x.shape[0]
+    n_ticks = n_micro + n_stages - 1
+    fwd = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def local(p_local, x_all):
+        stage = jax.lax.axis_index(axis)
+        p = jax.tree.map(lambda a: a[0], p_local)   # this device's stage
+
+        def tick(t, carry):
+            outputs, recv = carry
+            mb = t - stage                          # microbatch index here
+            active = (mb >= 0) & (mb < n_micro)
+            mb_c = jnp.clip(mb, 0, n_micro - 1)
+            # stage 0 reads fresh microbatches; later stages consume what
+            # the previous stage sent last tick
+            a_in = jnp.where(stage == 0, x_all[mb_c], recv)
+            out = stage_fn(p, a_in)
+            # the last stage commits finished microbatches
+            write = active & (stage == n_stages - 1)
+            committed = jnp.where(write, out, outputs[mb_c])
+            outputs = outputs.at[mb_c].set(committed)
+            # hand the activation to the next stage (drops off the end)
+            sent = jax.lax.ppermute(out, axis, fwd)
+            return outputs, sent
+
+        outputs0 = jnp.zeros_like(x_all)
+        recv0 = jnp.zeros_like(x_all[0])
+        outputs, _ = jax.lax.fori_loop(0, n_ticks, tick, (outputs0, recv0))
+        # only the last stage holds real outputs; psum replicates them
+        outputs = jnp.where(stage == n_stages - 1, outputs, 0.0)
+        return jax.lax.psum(outputs, axis)
+
+    return shard_map(
+        local, mesh,
+        in_specs=(P(axis), P()), out_specs=P(),
+    )(params, x)

@@ -1,0 +1,179 @@
+"""Pytree -> NamedSharding rules for params, optimizer state, batches, caches.
+
+Megatron-style tensor parallelism by parameter name (wq/wk/wv/w_gate/w_up
+split their output features on "model", wo/w_down their input features;
+MoE expert stacks split the expert axis), optional ZeRO/FSDP sharding of a
+remaining axis over the data axes, and batch-dim sharding for inputs and
+decode caches.  Every rule is divisibility-guarded: a dimension that does
+not divide the mesh axis size degrades to replicated, so the same rules
+serve the 8-host-device CI mesh and the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+# parameter names whose LAST dim carries the output features -> "model"
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "head"}
+# parameter names whose SECOND-TO-LAST dim carries input features -> "model"
+_ROW_PARALLEL = {"wo", "w_down", "out_proj"}
+
+
+def _mesh_axes(mesh: Mesh):
+    present = set(mesh.axis_names)
+    model = "model" if "model" in present else None
+    data = tuple(a for a in ("pod", "data") if a in present) or None
+    return data, model
+
+
+def _size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(spec: list, shape: tuple, mesh: Mesh) -> PartitionSpec:
+    """Replicate any entry whose dimension doesn't divide its mesh axes."""
+    out = []
+    used: set[str] = set()
+    for entry, dim in zip(spec, shape):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        if any(a in used for a in axes) or dim % _size(mesh, entry) or \
+                dim < _size(mesh, entry):
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(entry)
+    return PartitionSpec(*out)
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, GetAttrKey):
+            names.append(k.name)
+        elif isinstance(k, SequenceKey):
+            names.append(str(k.idx))
+    return names
+
+
+def param_shardings(params_shapes: Any, mesh: Mesh, fsdp: bool = False) -> Any:
+    """NamedSharding per parameter leaf.
+
+    Tensor parallelism by name (see module docstring); with ``fsdp=True``
+    the largest remaining axis is additionally sharded over the data axes
+    (ZeRO-3 style).  Unknown / small leaves replicate.
+    """
+    data, model = _mesh_axes(mesh)
+
+    def per_leaf(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        spec: list = [None] * nd
+        if model and nd >= 2:
+            if "moe" in names and nd >= 3 and \
+                    name in ("w_gate", "w_up", "w_down"):
+                spec[nd - 3] = model        # expert axis of (L, E, d, ff)
+            elif name in _COL_PARALLEL:
+                spec[-1] = model
+            elif name in _ROW_PARALLEL:
+                spec[-2] = model
+            elif name == "embed":
+                spec[0] = model             # vocab axis
+        if fsdp and data and nd >= 1:
+            free = [i for i in range(nd) if spec[i] is None]
+            if free:
+                i = max(free, key=lambda j: shape[j])
+                spec[i] = data if len(data) > 1 else data[0]
+        return NamedSharding(mesh, _fit(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params_shapes)
+
+
+def opt_shardings(opt_shapes: Any, params_sh: Any, mesh: Mesh) -> Any:
+    """Optimizer-state shardings: moment trees mirror the param shardings.
+
+    Works for any NamedTuple optimizer state (AdamW m/v, Adafactor vr/vc):
+    a field whose tree structure matches the params inherits the param
+    shardings leaf-for-leaf (re-fit to the leaf's own shape — factored
+    moments with reduced rank replicate where the spec no longer fits);
+    everything else (step counters, scalars) replicates.
+    """
+    rep = NamedSharding(mesh, PartitionSpec())
+    params_struct = jax.tree.structure(params_sh)
+
+    def mirror(leaf, psh):
+        spec = list(psh.spec) + [None] * leaf.ndim
+        return NamedSharding(mesh, _fit(spec[:leaf.ndim], leaf.shape, mesh))
+
+    if hasattr(opt_shapes, "_fields"):
+        out = {}
+        for f in opt_shapes._fields:
+            sub = getattr(opt_shapes, f)
+            if jax.tree.structure(sub) == params_struct:
+                out[f] = jax.tree.map(mirror, sub, params_sh)
+            else:
+                out[f] = jax.tree.map(lambda _: rep, sub)
+        return type(opt_shapes)(**out)
+    return jax.tree.map(lambda _: rep, opt_shapes)
+
+
+def batch_shardings(batch: Any, mesh: Mesh) -> Any:
+    """Inputs shard their leading (batch) dim over the data axes."""
+    data, _ = _mesh_axes(mesh)
+    d_entry = None if data is None else (data if len(data) > 1 else data[0])
+
+    def per_leaf(leaf):
+        spec: list = [None] * leaf.ndim
+        if d_entry is not None and leaf.ndim >= 1:
+            spec[0] = d_entry
+        return NamedSharding(mesh, _fit(spec, tuple(leaf.shape), mesh))
+
+    return jax.tree.map(per_leaf, batch)
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh, *, batch: int) -> Any:
+    """Decode-cache shardings: batch axis on "data", kv heads on "model".
+
+    The batch axis is located by extent (caches stack layers in front);
+    K/V leaves additionally shard their kv-head axis, SSM states their
+    head axis, on "model".
+    """
+    data, model = _mesh_axes(mesh)
+    d_entry = None if data is None else (data if len(data) > 1 else data[0])
+
+    def per_leaf(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = tuple(leaf.shape)
+        spec: list = [None] * leaf.ndim
+        if d_entry is not None:
+            # caches stack layers in front, so the batch axis is never
+            # axis 0 on >=2D leaves (guards n_layers == batch collisions)
+            first = 1 if leaf.ndim >= 2 else 0
+            for i in range(first, leaf.ndim):
+                if shape[i] == batch:
+                    spec[i] = d_entry
+                    break
+        if model:
+            if name in ("k", "v", "shared_k", "shared_v") and leaf.ndim >= 2:
+                spec[-2] = model            # kv-head axis of (..., S, KV, hd)
+            elif name == "ssm_state" and leaf.ndim >= 3:
+                spec[-3] = model            # head axis of (L, B, H, N, P)
+        return NamedSharding(mesh, _fit(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, cache_shapes)

@@ -77,11 +77,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, fsdp: bool = True,
         rec["kind"] = cell.kind
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
     hlo = compiled.as_text()
     # Loop-corrected totals (cost_analysis counts while bodies once —
     # verified in tests/test_roofline.py); raw values kept for reference.
     from repro.roofline import hlo_cost
+
+    cost = hlo_cost.xla_cost_analysis(compiled)
 
     corrected = hlo_cost.analyze(hlo)
     coll = dict(

@@ -185,13 +185,12 @@ def _attention_sharded(q, k, v, cfg, layer_window, prefix_len):
             softcap=cfg.attn_softcap, prefix_len=plen,
             chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
 
-    return jax.shard_map(
-        local, mesh=mesh,
+    return dist_api.shard_map(
+        local, mesh,
         in_specs=(P(dspec, None, model_ax, None),
                   P(dspec, None, None, None),
                   P(dspec, None, None, None), P(), P()),
         out_specs=P(dspec, None, model_ax, None),
-        check_vma=False,
     )(q, k, v, jnp.asarray(layer_window), jnp.asarray(prefix_len))
 
 
@@ -414,7 +413,6 @@ def moe_block(x: Array, p: MoEParams, top_k: int, capacity_factor: float,
 
     mesh, tr = ctx
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
 
     data_ax = tr.get("data")
     model_ax = tr.get("model")
@@ -473,10 +471,9 @@ def moe_block(x: Array, p: MoEParams, top_k: int, capacity_factor: float,
         aux = jax.lax.pmean(aux, all_axes) if all_axes else aux
         return out, aux
 
-    out, aux = shard_map(
-        local_fn, mesh=mesh,
+    out, aux = dist_api.shard_map(
+        local_fn, mesh,
         in_specs=(xspec, P(None, None), wspec_in, wspec_in, wspec_out),
         out_specs=(xspec, P()),
-        check_vma=False,
     )(x.reshape(t_glob, d), p.router, wg, wu, wd)
     return out.reshape(b, s, d), aux

@@ -53,6 +53,19 @@ _COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute-start"}
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to a flat dict.
+
+    Newer jaxlibs return a list with one properties-dict per program
+    (executable); older ones return the dict directly.  Callers always want
+    the entry program's dict, so indexing with a string key works either way.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _shape_bytes_of(text: str) -> int:
     return sum(
         _numel(dims) * _DTYPE_BYTES.get(t, 0)

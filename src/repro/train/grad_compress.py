@@ -85,14 +85,15 @@ def make_compressed_allreduce(mesh, axis_name: str = "data",
     n_shards = mesh.shape[axis_name]
 
     def reduce_fn(g_stacked):
+        from repro.dist.api import shard_map
+
         def local(g):
             return compressed_psum_local(g[0], axis_name, n_shards, block)
 
-        return jax.shard_map(
-            local, mesh=mesh,
+        return shard_map(
+            local, mesh,
             in_specs=P(axis_name, None),
             out_specs=P(None),
-            check_vma=False,
         )(g_stacked)
 
     return jax.jit(reduce_fn)

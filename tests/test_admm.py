@@ -105,6 +105,25 @@ def test_warm_start_stays_feasible_and_converges():
     assert float(s2w.z.min()) >= 0.0 and float(s2w.z.max()) <= 1.2 + 1e-6
 
 
+def test_warm_start_reproduces_cold_fixed_point_across_c_grid():
+    """Warm starts (z0/mu0) are an accelerator, not a different algorithm:
+    chained across the C-grid they must land on the same ADMM fixed point
+    as cold starts (the correctness contract of grid_search's reuse)."""
+    x, y = make_blobs(96, seed=7)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    k_mat = gaussian_block_xla(xj, xj, 1.0)
+    beta = 10.0
+    solver = _dense_solver(k_mat, beta)
+    warm_z = warm_mu = None
+    for c in (0.5, 1.0, 2.0):
+        cold, _ = admm_mod.admm_svm(solver, yj, c, beta, max_it=600)
+        warm, _ = admm_mod.admm_svm(solver, yj, c, beta, max_it=600,
+                                    z0=warm_z, mu0=warm_mu)
+        np.testing.assert_allclose(np.asarray(warm.z), np.asarray(cold.z),
+                                   atol=1e-3)
+        warm_z, warm_mu = warm.z, warm.mu
+
+
 def test_paper_beta_rule():
     assert admm_mod.paper_beta(50_000) == 1e2
     assert admm_mod.paper_beta(500_000) == 1e3

@@ -159,3 +159,44 @@ def test_distributed_svm_solve_matches_local():
                        text=True, cwd=os.path.dirname(os.path.dirname(
                            os.path.abspath(__file__))))
     assert "SVM_DIST_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_distributed_admm_c_grid_matches_single_device():
+    """admm_train_distributed on 8 host devices == the 1-device mesh, per C,
+    including the warm-start chaining across the grid."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import compression, factorization, tree as tree_mod
+        from repro.core.distributed import admm_train_distributed
+        from repro.core.kernelfn import KernelSpec
+        from repro.data import synthetic
+
+        n = 1024
+        x, y = synthetic.blobs(n, n_features=4, sep=1.6, seed=0)
+        t = tree_mod.build_tree(x, leaf_size=64)
+        xp = jnp.asarray(x[t.perm])
+        yp = jnp.asarray(y[t.perm])
+        hss = compression.compress(
+            xp, t, KernelSpec(h=1.0),
+            compression.CompressionParams(rank=24, n_near=32, n_far=48))
+        fac = factorization.factorize(hss, beta=100.0)
+
+        c_grid = [0.5, 1.0, 2.0]
+        res1 = admm_train_distributed(
+            fac, yp, c_grid, jax.make_mesh((1,), ("data",)), max_it=10)
+        res8 = admm_train_distributed(
+            fac, yp, c_grid, jax.make_mesh((8,), ("data",)), max_it=10)
+        for i in range(len(c_grid)):
+            np.testing.assert_allclose(
+                np.asarray(res8[i][0]), np.asarray(res1[i][0]),
+                rtol=1e-4, atol=1e-5)
+        print("ADMM_GRID_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "ADMM_GRID_OK" in r.stdout, r.stdout + r.stderr

@@ -94,7 +94,7 @@ def test_xla_cost_analysis_counts_while_once():
             c = jax.jit(f).lower(
                 jax.ShapeDtypeStruct((64, 64), jnp.float32),
                 jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)).compile()
-            flops[L] = (c.cost_analysis()["flops"],
+            flops[L] = (hlo_cost.xla_cost_analysis(c)["flops"],
                         hlo_cost.analyze(c.as_text())["flops"])
         raw4, fix4 = flops[4]
         raw8, fix8 = flops[8]
