@@ -1,5 +1,10 @@
 #!/usr/bin/env bash
-# Tier-1 CI: full test suite with 8 emulated host devices.
+# CI test runner.
+#
+# Default: the FAST tier — everything except tests marked `slow` (the
+# 8-emulated-device subprocess tests, see pytest.ini).  Pass --all for the
+# full suite (what the tier-1 verify `python -m pytest -x -q` runs).
+# Always prints the 10 slowest tests so tier creep stays visible.
 #
 # The distribution-layer tests (tests/test_dist.py, tests/test_fault.py,
 # tests/test_pipeline.py, ...) spawn subprocesses that set
@@ -12,4 +17,17 @@ cd "$(dirname "$0")/.."
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q "$@"
+tier_args=(-m "not slow")
+pass_args=()
+for arg in "$@"; do
+  if [[ "$arg" == "--all" ]]; then
+    tier_args=()
+  else
+    pass_args+=("$arg")
+  fi
+done
+
+# ${arr[@]+...} idiom: empty-array expansion is an unbound-variable error
+# under `set -u` on bash < 4.4 (stock macOS bash 3.2)
+python -m pytest -x -q --durations=10 \
+  ${tier_args[@]+"${tier_args[@]}"} ${pass_args[@]+"${pass_args[@]}"}

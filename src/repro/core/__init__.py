@@ -1,18 +1,24 @@
 """The paper's contribution: HSS kernel approximation + ADMM SVM training."""
 
-from repro.core.admm import ADMMState, admm_svm, paper_beta
+from repro.core.admm import ADMMState, admm_svm, admm_svm_batched, paper_beta
 from repro.core.compression import CompressionParams, compress, compression_error
-from repro.core.factorization import HSSFactorization, factorize, hss_solve
+from repro.core.factorization import (
+    HSSFactorization, factorize, hss_solve, hss_solve_mat,
+)
 from repro.core.hss import HSSMatrix
 from repro.core.kernelfn import KernelSpec, kernel_block
+from repro.core.multiclass import (
+    MulticlassHSSSVMTrainer, MulticlassSVMModel, grid_search_multiclass,
+)
 from repro.core.svm import HSSSVMTrainer, SVMModel, grid_search
 from repro.core.tree import ClusterTree, build_tree, pad_dataset
 
 __all__ = [
-    "ADMMState", "admm_svm", "paper_beta",
+    "ADMMState", "admm_svm", "admm_svm_batched", "paper_beta",
     "CompressionParams", "compress", "compression_error",
-    "HSSFactorization", "factorize", "hss_solve",
+    "HSSFactorization", "factorize", "hss_solve", "hss_solve_mat",
     "HSSMatrix", "KernelSpec", "kernel_block",
     "HSSSVMTrainer", "SVMModel", "grid_search",
+    "MulticlassHSSSVMTrainer", "MulticlassSVMModel", "grid_search_multiclass",
     "ClusterTree", "build_tree", "pad_dataset",
 ]

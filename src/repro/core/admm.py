@@ -33,7 +33,8 @@ import jax
 import jax.numpy as jnp
 
 Array = jax.Array
-Solver = Callable[[Array], Array]   # b -> K_beta^{-1} b
+Solver = Callable[[Array], Array]      # b (d,)   -> K_beta^{-1} b
+SolverMat = Callable[[Array], Array]   # B (d, k) -> K_beta^{-1} B
 
 
 class ADMMState(NamedTuple):
@@ -61,44 +62,96 @@ def admm_svm(
 
     ``solver`` must apply (K̃ + βI)^{-1}; with the HSS factorization each call
     is O(d r).  Supports warm starts (z0, mu0) — used by the C-grid search.
+    Single-problem (k = 1) view of ``admm_svm_batched``.
     """
     d = y.shape[0]
-    dtype = y.dtype
-    e = jnp.ones((d,), dtype)
-    w = solver(e)                       # K_β^{-1} e   (precomputed once)
-    w1 = e @ w
-    w_y = y * w
-    c_vec = jnp.broadcast_to(jnp.asarray(c_upper, dtype), (d,))
+    c_vec = jnp.broadcast_to(jnp.asarray(c_upper, y.dtype), (d,))
+    state, trace = admm_svm_batched(
+        lambda b: solver(b[:, 0])[:, None],
+        y[None, :], c_vec[None, :], beta, max_it,
+        z0=None if z0 is None else z0[:, None],
+        mu0=None if mu0 is None else mu0[:, None],
+        use_fused_update=use_fused_update,
+    )
+    return (ADMMState(*(a[:, 0] for a in state)),
+            ADMMTrace(*(a[:, 0] for a in trace)))
 
-    z_init = jnp.zeros((d,), dtype) if z0 is None else z0
-    mu_init = jnp.zeros((d,), dtype) if mu0 is None else mu0
+
+def admm_svm_batched(
+    solver_mat: SolverMat,
+    ys: Array,
+    c_upper: Array | float,
+    beta: float,
+    max_it: int = 10,
+    z0: Array | None = None,
+    mu0: Array | None = None,
+    use_fused_update: bool = False,
+) -> tuple[ADMMState, ADMMTrace]:
+    """Run k SVM dual ADMM problems that share one (K̃ + βI) factorization.
+
+    ``ys`` is (k, d): one ±1 label vector per problem (the per-class label
+    vectors of a one-vs-rest reduction, or per-pair vectors of one-vs-one).
+    The kernel side of the x-step is label-independent, so
+      * w = K_β⁻¹ e is computed ONCE and shared by every problem, and
+      * the per-iteration solves of all k problems are ONE multi-RHS sweep
+        ``solver_mat`` over a (d, k) block (factorization.hss_solve_mat)
+    instead of k sequential single-RHS solves — the paper's factor-once
+    economy extended across the class axis.
+
+    ``c_upper`` may be a scalar, a shared (d,) vector, or a per-problem
+    (k, d) matrix (one-vs-one pins non-participating points to [0, 0]).
+    State arrays are (d, k); traces are (max_it, k).  Supports (d, k) warm
+    starts ``z0``/``mu0`` for the C-grid × class product sweep.
+    ``use_fused_update`` routes the elementwise z/μ step through the Pallas
+    kernel (repro.kernels.admm_update) on the flattened (d·k,) block.
+    """
+    k, d = ys.shape
+    dtype = ys.dtype
+    y_cols = ys.T                                  # (d, k)
+    e = jnp.ones((d,), dtype)
+    w = solver_mat(e[:, None])[:, 0]               # K_β^{-1} e, shared by all k
+    w1 = e @ w
+    w_y = y_cols * w[:, None]                      # (d, k)
+    c_arr = jnp.asarray(c_upper, dtype)
+    if c_arr.ndim == 1:                            # shared (d,) box vector
+        c_arr = c_arr[:, None]
+    elif c_arr.ndim == 2:                          # per-problem (k, d)
+        c_arr = c_arr.T
+    c_mat = jnp.broadcast_to(c_arr, (d, k))
+
+    z_init = jnp.zeros((d, k), dtype) if z0 is None else z0
+    mu_init = jnp.zeros((d, k), dtype) if mu0 is None else mu0
 
     if use_fused_update:
         from repro.kernels.admm_update import ops as admm_ops
 
-        def zmu_update(x, z, mu):
-            return admm_ops.fused_zmu_update(x, mu, c_vec, beta)
+        c_flat = c_mat.reshape(-1)                 # the Pallas kernel is 1-D
+
+        def zmu_update(x, mu):
+            z_f, mu_f = admm_ops.fused_zmu_update(
+                x.reshape(-1), mu.reshape(-1), c_flat, beta)
+            return z_f.reshape(x.shape), mu_f.reshape(x.shape)
     else:
-        def zmu_update(x, z, mu):
-            z_new = jnp.clip(x - mu / beta, 0.0, c_vec)
+        def zmu_update(x, mu):
+            z_new = jnp.clip(x - mu / beta, 0.0, c_mat)
             mu_new = mu - beta * (x - z_new)
             return z_new, mu_new
 
     def step(state: ADMMState, _):
         x, z, mu = state
-        q = e + mu + beta * z
-        yq = y * q
-        u = solver(yq)
-        w2 = w @ yq
-        x_new = y * u - (w2 / w1) * w_y
-        z_new, mu_new = zmu_update(x_new, z, mu)
+        q = 1.0 + mu + beta * z                    # e broadcast over columns
+        yq = y_cols * q                            # (d, k)
+        u = solver_mat(yq)                         # ONE k-RHS solve
+        w2 = w @ yq                                # (k,)
+        x_new = y_cols * u - (w2 / w1)[None, :] * w_y
+        z_new, mu_new = zmu_update(x_new, mu)
         trace = ADMMTrace(
-            primal_res=jnp.linalg.norm(x_new - z_new),
-            dual_res=beta * jnp.linalg.norm(z_new - z),
+            primal_res=jnp.linalg.norm(x_new - z_new, axis=0),
+            dual_res=beta * jnp.linalg.norm(z_new - z, axis=0),
         )
         return ADMMState(x_new, z_new, mu_new), trace
 
-    init = ADMMState(jnp.zeros((d,), dtype), z_init, mu_init)
+    init = ADMMState(jnp.zeros((d, k), dtype), z_init, mu_init)
     final, trace = jax.lax.scan(step, init, None, length=max_it)
     return final, trace
 

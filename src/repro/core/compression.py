@@ -216,9 +216,6 @@ def compression_error(hss: HSSMatrix, spec: KernelSpec, n_probe: int = 8,
 
     key = jax.random.PRNGKey(seed)
     v = jax.random.normal(key, (hss.n, n_probe), hss.x.dtype)
-    kv = jax.vmap(
-        lambda col: kernel_matvec_streamed(spec, hss.x, hss.x, col), in_axes=1,
-        out_axes=1,
-    )(v)
+    kv = kernel_matvec_streamed(spec, hss.x, hss.x, v)
     kv_hss = hss.matmat(v)
     return jnp.linalg.norm(kv_hss - kv) / jnp.maximum(jnp.linalg.norm(kv), 1e-30)

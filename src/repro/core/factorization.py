@@ -53,8 +53,8 @@ class HSSFactorization:
         return hss_solve(self, b)
 
     def solve_mat(self, b: Array) -> Array:
-        """Solve for multiple RHS, b of shape (N, c)."""
-        return jax.vmap(self.solve, in_axes=1, out_axes=1)(b)
+        """Solve for multiple RHS, b of shape (N, c) — one native block sweep."""
+        return hss_solve_mat(self, b)
 
 
 def _leaf_factors(d_shift: Array, u: Array) -> tuple[Array, Array, Array]:
@@ -153,37 +153,50 @@ def factorize(hss: HSSMatrix, beta: float,
 
 
 def hss_solve(fac: HSSFactorization, b: Array) -> Array:
-    """x = (K̃ + beta I)^{-1} b in O(N r): one upward + one downward sweep."""
+    """x = (K̃ + beta I)^{-1} b in O(N r): single-RHS view of the block sweep."""
+    return hss_solve_mat(fac, b[:, None])[:, 0]
+
+
+def hss_solve_mat(fac: HSSFactorization, b: Array) -> Array:
+    """X = (K̃ + beta I)^{-1} B for B (N, c): one upward + one downward sweep.
+
+    The RHS block is carried as a trailing axis through every level einsum,
+    so all c columns (ADMM iterates of c classes, or a warm-started C grid)
+    share a single pass over the E/G factors — the multiclass analogue of
+    the paper's factor-once/solve-many economy.
+    """
     K, m = fac.levels, fac.leaf_size
+    c = b.shape[1]
     if K == 0:
         return jsl.cho_solve((fac.root_lu, True), b)
 
     n_leaf = fac.e_leaf.shape[0]
-    b0 = b.reshape(n_leaf, m)
+    b0 = b.reshape(n_leaf, m, c)
     # Upward sweep: project the RHS through Eᵀ level by level.
     bs = [b0]
-    bt = jnp.einsum("nmr,nm->nr", fac.e_leaf, b0)
+    bt = jnp.einsum("nmr,nmc->nrc", fac.e_leaf, b0)
     for k in range(1, K):
-        b_k = bt.reshape(fac.e_lvls[k - 1].shape[0], -1)   # (n_k, 2 r_{k-1})
+        n_k = fac.e_lvls[k - 1].shape[0]
+        b_k = bt.reshape(n_k, -1, c)                        # (n_k, 2 r_{k-1}, c)
         bs.append(b_k)
-        bt = jnp.einsum("ncr,nc->nr", fac.e_lvls[k - 1], b_k)
-    b_root = bt.reshape(-1)
+        bt = jnp.einsum("nsr,nsc->nrc", fac.e_lvls[k - 1], b_k)
+    b_root = bt.reshape(-1, c)
     # root stays f32 regardless of the factor storage dtype
     x_root = jsl.lu_solve(
         (fac.root_lu, fac.root_piv), b_root.astype(fac.root_lu.dtype)
     ).astype(bt.dtype)
 
     # Downward sweep: x_k = G_k b_k + E_k xi_k.
-    xi = x_root.reshape(2, -1)                              # level K-1 nodes
+    xi = x_root.reshape(2, -1, c)                           # level K-1 nodes
     for k in range(K - 1, 0, -1):
         b_k = bs[k]
         x_k = (
-            jnp.einsum("ncd,nd->nc", fac.g_lvls[k - 1], b_k)
-            + jnp.einsum("ncr,nr->nc", fac.e_lvls[k - 1], xi)
+            jnp.einsum("nsd,ndc->nsc", fac.g_lvls[k - 1], b_k)
+            + jnp.einsum("nsr,nrc->nsc", fac.e_lvls[k - 1], xi)
         )
-        xi = x_k.reshape(-1, x_k.shape[-1] // 2)            # children skeleton
+        xi = x_k.reshape(-1, x_k.shape[1] // 2, c)          # children skeleton
     x0 = (
-        jnp.einsum("nab,nb->na", fac.g_leaf, b0)
-        + jnp.einsum("nmr,nr->nm", fac.e_leaf, xi)
+        jnp.einsum("nab,nbc->nac", fac.g_leaf, b0)
+        + jnp.einsum("nmr,nrc->nmc", fac.e_leaf, xi)
     )
-    return x0.reshape(-1)
+    return x0.reshape(-1, c)

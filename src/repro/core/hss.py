@@ -67,48 +67,55 @@ class HSSMatrix:
         return dataclasses.replace(self, d_leaf=self.d_leaf + beta * eye)
 
     # ------------------------------------------------------------------ #
-    # telescoping matvec                                                 #
+    # telescoping matvec / matmat                                        #
     # ------------------------------------------------------------------ #
     def matvec(self, v: Array) -> Array:
-        """K̃ @ v in O(N r) — upward sweep, sibling coupling, downward sweep."""
+        """K̃ @ v in O(N r) — single-RHS view of the native matmat sweep."""
+        return self.matmat(v[:, None])[:, 0]
+
+    def matmat(self, v: Array) -> Array:
+        """K̃ @ V for V (N, c) — ONE telescoping sweep over the RHS block.
+
+        The RHS columns ride along as a trailing axis of every per-level
+        einsum (no ``jax.vmap`` over single-RHS sweeps), so the k per-class
+        vectors of a multiclass problem cost one pass over the HSS factors
+        instead of k.
+        """
         K = self.levels
         n_leaf, m = self.n_leaves, self.leaf_size
-        vl = v.reshape(n_leaf, m)
-        diag = jnp.einsum("nab,nb->na", self.d_leaf, vl)
+        c = v.shape[1]
+        vl = v.reshape(n_leaf, m, c)
+        diag = jnp.einsum("nab,nbc->nac", self.d_leaf, vl)
         if K == 0:
-            return diag.reshape(-1)
+            return diag.reshape(-1, c)
 
         # Upward: project into skeleton coordinates at every level.
-        vt = [jnp.einsum("nmr,nm->nr", self.u_leaf, vl)]  # level 0: (n_leaf, r0)
+        vt = [jnp.einsum("nmr,nmc->nrc", self.u_leaf, vl)]  # (n_leaf, r0, c)
         for k in range(1, K):
             t = self.transfers[k - 1]                       # (n_k, 2 r_{k-1}, r_k)
-            prev = vt[-1].reshape(t.shape[0], t.shape[1])   # pair children
-            vt.append(jnp.einsum("ncr,nc->nr", t, prev))
+            prev = vt[-1].reshape(t.shape[0], t.shape[1], c)  # pair children
+            vt.append(jnp.einsum("nsr,nsc->nrc", t, prev))
 
         # Downward: accumulate incoming far-field per node, top level first.
         w = None
         for k in range(K, 0, -1):
             b = self.b_mats[k - 1]                          # (n_k, r_{k-1}, r_{k-1})
-            pair = vt[k - 1].reshape(b.shape[0], 2, b.shape[1])
+            pair = vt[k - 1].reshape(b.shape[0], 2, b.shape[1], c)
             coup = jnp.stack(
                 [
-                    jnp.einsum("nij,nj->ni", b, pair[:, 1]),
-                    jnp.einsum("nji,nj->ni", b, pair[:, 0]),
+                    jnp.einsum("nij,njc->nic", b, pair[:, 1]),
+                    jnp.einsum("nji,njc->nic", b, pair[:, 0]),
                 ],
                 axis=1,
-            )                                               # (n_k, 2, r_{k-1})
+            )                                               # (n_k, 2, r_{k-1}, c)
             if w is not None:
                 t = self.transfers[k - 1]
-                down = jnp.einsum("ncr,nr->nc", t, w)       # (n_k, 2 r_{k-1})
+                down = jnp.einsum("nsr,nrc->nsc", t, w)     # (n_k, 2 r_{k-1}, c)
                 coup = coup + down.reshape(coup.shape)
-            w = coup.reshape(-1, coup.shape[-1])            # (n_{k-1}, r_{k-1})
+            w = coup.reshape(-1, coup.shape[-2], c)         # (n_{k-1}, r_{k-1}, c)
 
-        out = diag + jnp.einsum("nmr,nr->nm", self.u_leaf, w)
-        return out.reshape(-1)
-
-    def matmat(self, v: Array) -> Array:
-        """K̃ @ V for V (N, c)."""
-        return jax.vmap(self.matvec, in_axes=1, out_axes=1)(v)
+        out = diag + jnp.einsum("nmr,nrc->nmc", self.u_leaf, w)
+        return out.reshape(-1, c)
 
     # ------------------------------------------------------------------ #
     # dense reconstruction (tests / small problems only)                 #

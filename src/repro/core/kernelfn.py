@@ -72,7 +72,10 @@ def kernel_matvec_streamed(
     """(K(x_rows, x_cols) @ v) without materializing the full block.
 
     Streams over row blocks with ``lax.map`` — O(block * n_cols) live memory.
-    Used by prediction when the support set is large.
+    Used by prediction when the support set is large.  ``v`` may be a single
+    (n_cols,) vector or a (n_cols, k) block — multiclass prediction scores
+    all k per-class coefficient columns against each kernel block while it
+    is live, so k classes cost one pass over the kernel, not k.
     """
     n = x_rows.shape[0]
     pad = (-n) % block
@@ -82,5 +85,6 @@ def kernel_matvec_streamed(
     def body(xblk):
         return kernel_block(spec, xblk, x_cols) @ v
 
-    out = jax.lax.map(body, xr).reshape(-1)
+    out = jax.lax.map(body, xr)
+    out = out.reshape(-1) if v.ndim == 1 else out.reshape(-1, v.shape[1])
     return out[:n]

@@ -62,6 +62,57 @@ def susy_like(n: int, n_features: int = 18, seed: int = 0):
     return x[p], y[p]
 
 
+def multiclass_blobs(n: int, n_classes: int = 4, n_features: int = 8,
+                     sep: float = 3.0, seed: int = 0):
+    """k Gaussian clusters on a simplex-ish layout; labels are 0..k-1 ints.
+
+    The one-vs-rest workhorse: every class is compact, so each binary
+    subproblem is blobs-vs-rest difficulty (controlled by ``sep``).
+    """
+    r = np.random.default_rng(seed)
+    centers = r.normal(size=(n_classes, n_features))
+    centers *= sep / np.maximum(
+        np.linalg.norm(centers, axis=1, keepdims=True), 1e-9)
+    counts = np.full(n_classes, n // n_classes)
+    counts[: n - counts.sum()] += 1
+    xs, ys = [], []
+    for c in range(n_classes):
+        xs.append(r.normal(size=(counts[c], n_features)) + centers[c])
+        ys.append(np.full(counts[c], c))
+    x = np.concatenate(xs).astype(np.float32)
+    y = np.concatenate(ys).astype(np.int32)
+    p = r.permutation(n)
+    return x[p], y[p]
+
+
+def spirals(n: int, n_classes: int = 3, n_features: int = 2,
+            turns: float = 1.25, noise: float = 0.08, seed: int = 0):
+    """k interleaved 2-D spiral arms (embedded in n_features dims).
+
+    Strongly nonlinear boundaries between EVERY pair of classes — the regime
+    where a global low-rank kernel approximation fails but HSS keeps the
+    near-field exact.  Labels are 0..k-1 ints.
+    """
+    r = np.random.default_rng(seed)
+    counts = np.full(n_classes, n // n_classes)
+    counts[: n - counts.sum()] += 1
+    xs, ys = [], []
+    for c in range(n_classes):
+        t = np.sqrt(r.uniform(0.05, 1.0, size=counts[c]))
+        ang = 2 * np.pi * (turns * t + c / n_classes)
+        arm = np.stack([t * np.cos(ang), t * np.sin(ang)], axis=1)
+        arm += noise * r.normal(size=arm.shape)
+        if n_features > 2:
+            extra = 0.05 * r.normal(size=(counts[c], n_features - 2))
+            arm = np.concatenate([arm, extra], axis=1)
+        xs.append(arm)
+        ys.append(np.full(counts[c], c))
+    x = np.concatenate(xs).astype(np.float32)
+    y = np.concatenate(ys).astype(np.int32)
+    p = r.permutation(n)
+    return x[p], y[p]
+
+
 DATASETS = {
     "blobs": blobs,
     "circles": circles,
@@ -69,7 +120,13 @@ DATASETS = {
     "susy_like": susy_like,
 }
 
+MULTICLASS_DATASETS = {
+    "multiclass_blobs": multiclass_blobs,
+    "spirals": spirals,
+}
+
 
 def train_test(name: str, n_train: int, n_test: int, seed: int = 0, **kw):
-    x, y = DATASETS[name](n_train + n_test, seed=seed, **kw)
+    gen = DATASETS.get(name) or MULTICLASS_DATASETS[name]
+    x, y = gen(n_train + n_test, seed=seed, **kw)
     return x[:n_train], y[:n_train], x[n_train:], y[n_train:]

@@ -96,6 +96,7 @@ def test_training_resume_bit_exact():
     _assert_tree_equal(ref["params"], resumed["params"])
 
 
+@pytest.mark.slow
 def test_elastic_reshard_subprocess():
     """Save under an 8-device mesh, restore under a 4-device mesh."""
     import subprocess, sys, textwrap

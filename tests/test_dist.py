@@ -39,6 +39,7 @@ def test_param_shardings_cover_all_leaves():
     assert n == len(jax.tree.leaves(shapes))
 
 
+@pytest.mark.slow
 def test_distributed_train_step_matches_single_device():
     code = textwrap.dedent("""
         import os
@@ -84,6 +85,7 @@ def test_distributed_train_step_matches_single_device():
     assert "DIST_OK" in r.stdout, r.stdout + r.stderr
 
 
+@pytest.mark.slow
 def test_sharded_attention_matches_single_device():
     """The shard_map head-parallel attention (incl. GQA kv slicing) must
     match the single-device path bit-for-bit-ish on an 8-device mesh."""
@@ -122,6 +124,7 @@ def test_sharded_attention_matches_single_device():
     assert "ATTN_SHARD_OK" in r.stdout, r.stdout + r.stderr
 
 
+@pytest.mark.slow
 def test_distributed_svm_solve_matches_local():
     """HSS factorization solve under an 8-device mesh == local solve."""
     code = textwrap.dedent("""
@@ -161,6 +164,7 @@ def test_distributed_svm_solve_matches_local():
     assert "SVM_DIST_OK" in r.stdout, r.stdout + r.stderr
 
 
+@pytest.mark.slow
 def test_distributed_admm_c_grid_matches_single_device():
     """admm_train_distributed on 8 host devices == the 1-device mesh, per C,
     including the warm-start chaining across the grid."""

@@ -54,6 +54,22 @@ def test_solve_mat_multiple_rhs():
         )
 
 
+def test_native_multi_rhs_equals_columnwise_single_rhs():
+    """Regression for the native (N, k) block sweep: the multi-RHS solve must
+    reproduce k column-wise single-RHS solves to 1e-6 (the vmap path it
+    replaced was exact column-wise by construction)."""
+    hss = _hss(n=512, leaf=64, rank=24)
+    for beta in (1.0, 100.0):
+        fac = factorization.factorize(hss, beta)
+        b = jnp.asarray(
+            np.random.default_rng(7).normal(size=(512, 6)), jnp.float32)
+        block = factorization.hss_solve_mat(fac, b)
+        cols = jnp.stack(
+            [factorization.hss_solve(fac, b[:, j]) for j in range(6)], axis=1)
+        np.testing.assert_allclose(
+            np.asarray(block), np.asarray(cols), rtol=1e-6, atol=1e-6)
+
+
 def test_two_level_tree():
     # K = 1: only leaves + root coupling — exercises the boundary case.
     hss = _hss(n=128, leaf=64, rank=24)

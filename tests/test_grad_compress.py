@@ -37,6 +37,7 @@ def test_error_feedback_unbiased_over_time():
     assert resid < 0.2, resid
 
 
+@pytest.mark.slow
 def test_compressed_allreduce_multidevice():
     """int8 all-to-all reduce-scatter + all-gather == plain sum (8 devices)."""
     code = textwrap.dedent("""

@@ -66,6 +66,18 @@ def test_matmat():
         )
 
 
+def test_native_matmat_equals_columnwise_matvec():
+    """Regression for the native multi-RHS telescoping sweep: the (N, k)
+    matmat must match k column-wise matvecs to 1e-6."""
+    hss, _, _, _ = _build(n=512, leaf=64, rank=24)
+    v = jnp.asarray(np.random.default_rng(9).normal(size=(512, 5)), jnp.float32)
+    out = hss.matmat(v)
+    cols = jnp.stack([hss.matvec(v[:, j]) for j in range(5)], axis=1)
+    # 2e-6 absolute: f32 reduction-order noise between the c=1 and c=k sweeps
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(cols), rtol=1e-6, atol=2e-6)
+
+
 def test_shifted_adds_identity():
     hss, _, _, _ = _build(n=256, leaf=32, rank=16)
     v = jnp.ones(256, jnp.float32)

@@ -3,7 +3,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
 
+
+@pytest.mark.slow
 def test_pipeline_matches_sequential():
     """4-stage GPipe over 8 host devices == sequential reference (fp32)."""
     code = textwrap.dedent("""

@@ -100,6 +100,46 @@ def test_property_admm_iterates_feasible():
         assert float(jnp.abs(y @ state.x)) < 1e-2 * 96, case
 
 
+def test_property_hss_invariants_randomized_trees():
+    """Structural HSS invariants over randomized tree depths, leaf sizes and
+    ranks: matvec ≡ todense()@v, symmetry, shift identity, and O(N r) storage
+    strictly below dense storage."""
+    for case in pt.Cases(n_cases=6, seed=8).draw(dict(
+            leaf=pt.choice(32, 64),
+            depth=pt.ints(1, 3),
+            rank=pt.choice(8, 16),
+            h=pt.floats(0.5, 4.0, log=True),
+            beta=pt.floats(1.0, 1e3, log=True),
+            data_seed=pt.ints(0, 1000))):
+        leaf, depth = case["leaf"], case["depth"]
+        n = leaf * 2 ** depth
+        rng = np.random.default_rng(case["data_seed"])
+        x = rng.normal(size=(n, 4)).astype(np.float32)
+        t = tree_mod.build_tree(x, leaf_size=leaf, levels=depth)
+        xp = jnp.asarray(x[t.perm])
+        hss = compression.compress(
+            xp, t, KernelSpec(h=case["h"]),
+            compression.CompressionParams(
+                rank=case["rank"], n_near=24, n_far=32))
+        dense = hss.todense()
+        # matvec consistent with the dense reconstruction
+        v = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        np.testing.assert_allclose(
+            np.asarray(hss.matvec(v)), np.asarray(dense @ v),
+            rtol=2e-4, atol=2e-4, err_msg=str(case))
+        # symmetry of the reconstruction
+        np.testing.assert_allclose(
+            np.asarray(dense), np.asarray(dense).T, atol=1e-5,
+            err_msg=str(case))
+        # shifted(beta) adds exactly beta*I
+        np.testing.assert_allclose(
+            np.asarray(hss.shifted(case["beta"]).todense()),
+            np.asarray(dense) + case["beta"] * np.eye(n, dtype=np.float32),
+            rtol=1e-5, atol=1e-4, err_msg=str(case))
+        # storage strictly below the dense kernel matrix
+        assert hss.memory_bytes() < n * n * 4, case
+
+
 def test_property_rope_norm_preserving():
     """RoPE is a rotation: per-head vector norms are invariant."""
     from repro.models.layers import apply_rope

@@ -88,6 +88,20 @@ def test_admm_time_much_smaller_than_compression():
     assert trainer.report.admm_s < rep.compression_s + rep.factorization_s
 
 
+def test_laplacian_kernel_end_to_end():
+    """KernelSpec(name='laplacian'): compression -> factorization -> ADMM ->
+    predict must work and classify (previously zero coverage)."""
+    xtr, ytr, xte, yte = _train_test(n_train=640, n_test=128, seed=3, sep=1.8)
+    trainer = HSSSVMTrainer(
+        spec=KernelSpec(name="laplacian", h=2.0),
+        comp=CompressionParams(rank=32, n_near=48, n_far=64),
+        leaf_size=64, max_it=10)
+    model = trainer.fit(xtr, ytr, c_value=1.0)
+    assert model.spec.name == "laplacian"
+    acc = float(jnp.mean(model.predict(jnp.asarray(xte)) == yte))
+    assert acc > 0.85, acc
+
+
 def test_report_fields():
     xtr, ytr, _, _ = _train_test(n_train=256, n_test=10)
     trainer = HSSSVMTrainer(
