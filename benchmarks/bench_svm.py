@@ -8,15 +8,27 @@ neighbours — here rank 64).  The paper's headline observations to check:
   (1) crude ≈ accurate in accuracy (approximation tolerance of SVMs),
   (2) ADMM time << compression time (the C-grid amortization),
   (3) memory scales O(N r), not O(N^2).
+
+All cases drive repro.core.engine.HSSSVMEngine — the same orchestration the
+launch/ and examples/ layers use — and every case additionally records a
+machine-readable dict.  ``python benchmarks/bench_svm.py --json
+BENCH_svm.json`` (or the ci/run_tests.sh --bench smoke tier) writes them:
+build/factor/ADMM wall times, holdout accuracy, HSS memory, and the peak
+per-device bytes of the resident HSS + factorization arrays (the number the
+mesh-parallel build exists to keep flat as devices are added).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compression import CompressionParams
+from repro.core.engine import HSSSVMEngine
 from repro.core.kernelfn import KernelSpec
 from repro.core.multiclass import MulticlassHSSSVMTrainer
 from repro.core.svm import HSSSVMTrainer
@@ -33,17 +45,49 @@ DATASETS = [
     ("susy_like", dict(), 16384, 4096, 3.0),
 ]
 
+# Machine-readable records accumulated by every run_* function; written by
+# write_json() / the --json CLI flag.
+JSON_RECORDS: list[dict] = []
 
-def run(csv_rows: list) -> None:
+
+def peak_device_bytes(*pytrees) -> int:
+    """Max over devices of resident bytes across the given array pytrees."""
+    per_dev: dict = {}
+    for tree in pytrees:
+        for a in jax.tree.leaves(tree):
+            shards = getattr(a, "addressable_shards", None)
+            if shards is None:
+                continue
+            for s in shards:
+                per_dev[s.device] = per_dev.get(s.device, 0) + s.data.nbytes
+    return max(per_dev.values()) if per_dev else 0
+
+
+def _record(case: str, **kw) -> dict:
+    rec = dict(case=case, **kw)
+    JSON_RECORDS.append(rec)
+    return rec
+
+
+def run(csv_rows: list, scale: float = 1.0) -> None:
     for name, kw, n_train, n_test, h in DATASETS:
+        n_train, n_test = int(n_train * scale), max(int(n_test * scale), 256)
         xtr, ytr, xte, yte = synthetic.train_test(name, n_train, n_test,
                                                   seed=0, **kw)
         for preset_name, comp in PRESETS.items():
-            trainer = HSSSVMTrainer(
+            engine = HSSSVMEngine(
                 spec=KernelSpec(h=h), comp=comp, leaf_size=256, max_it=10)
-            rep = trainer.prepare(xtr, ytr)
-            model, _ = trainer.train(1.0)
+            rep = engine.prepare(xtr, ytr)
+            model, _ = engine.train(1.0)
             acc = float(jnp.mean(model.predict(jnp.asarray(xte)) == yte))
+            _record(
+                f"svm_table45/{name}/{preset_name}",
+                n_train=n_train, accuracy=acc,
+                compression_s=rep.compression_s,
+                factorization_s=rep.factorization_s,
+                admm_s=rep.admm_s, memory_mb=rep.memory_mb,
+                peak_device_bytes=peak_device_bytes(engine.hss, engine.fac),
+            )
             csv_rows.append((
                 f"svm_table45/{name}/{preset_name}",
                 rep.admm_s * 1e6,
@@ -51,6 +95,58 @@ def run(csv_rows: list) -> None:
                 f"factor_s={rep.factorization_s:.2f};"
                 f"mem_mb={rep.memory_mb:.1f};admm_s={rep.admm_s:.3f}",
             ))
+
+
+def run_sharded(csv_rows: list, scale: float = 1.0) -> None:
+    """Mesh-parallel build over all local devices vs the local build.
+
+    The quantity of interest is peak PER-DEVICE bytes of the resident HSS +
+    factorization: the sharded build divides it by ~n_devices (leaf arrays
+    dominate) while matching the local build's accuracy — the ISSUE's
+    "training never hits a single device's memory ceiling" claim in
+    measurable form.
+    """
+    n_train, n_test = int(16384 * scale), max(int(2048 * scale), 256)
+    xtr, ytr, xte, yte = synthetic.train_test(
+        "blobs", n_train, n_test, seed=0, n_features=8, sep=1.6)
+    comp = PRESETS["crude"]
+    cases = [("local", None)]
+    if jax.device_count() > 1:
+        cases.append(
+            ("mesh", jax.make_mesh((jax.device_count(),), ("data",))))
+    accs = {}
+    for label, mesh in cases:
+        engine = HSSSVMEngine(spec=KernelSpec(h=1.0), comp=comp,
+                              leaf_size=256, max_it=10, mesh=mesh)
+        rep = engine.prepare(xtr, ytr)
+        model, _ = engine.train(1.0)
+        acc = float(jnp.mean(model.predict(jnp.asarray(xte)) == yte))
+        accs[label] = acc
+        peak = peak_device_bytes(engine.hss, engine.fac)
+        ndev = 1 if mesh is None else jax.device_count()
+        _record(
+            f"svm_sharded_build/{label}",
+            n_train=n_train, n_devices=ndev, accuracy=acc,
+            compression_s=rep.compression_s,
+            factorization_s=rep.factorization_s,
+            admm_s=rep.admm_s, memory_mb=rep.memory_mb,
+            peak_device_bytes=peak,
+        )
+        csv_rows.append((
+            f"svm_sharded_build/{label}",
+            rep.compression_s * 1e6,
+            f"acc={acc:.4f};n_devices={ndev};"
+            f"compress_s={rep.compression_s:.2f};"
+            f"factor_s={rep.factorization_s:.2f};"
+            f"peak_device_mb={peak / 1e6:.1f}",
+        ))
+    if len(accs) == 2:
+        csv_rows.append((
+            "svm_sharded_build/parity",
+            0.0,
+            f"acc_local={accs['local']:.4f};acc_mesh={accs['mesh']:.4f};"
+            f"delta={abs(accs['local'] - accs['mesh']):.4f}",
+        ))
 
 
 MULTICLASS_CASES = [
@@ -104,6 +200,11 @@ def run_multiclass(csv_rows: list) -> None:
         t_seq, acc_seq = sequential()
 
         speedup = t_seq / max(t_batched, 1e-9)
+        _record(
+            f"svm_multiclass/{k}way",
+            n_train=n_train, batched_s=t_batched, sequential_s=t_seq,
+            speedup=speedup, accuracy=acc, accuracy_sequential=acc_seq,
+        )
         csv_rows.append((
             f"svm_multiclass/{k}way/batched_vs_sequential",
             t_batched * 1e6,
@@ -115,9 +216,32 @@ def run_multiclass(csv_rows: list) -> None:
         ))
 
 
+def write_json(path: str) -> None:
+    payload = dict(
+        n_devices=jax.device_count(),
+        backend=jax.default_backend(),
+        results=JSON_RECORDS,
+    )
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {len(JSON_RECORDS)} records to {path}")
+
+
 if __name__ == "__main__":
-    rows = []
-    run(rows)
-    run_multiclass(rows)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_svm.json",
+                    help="machine-readable output path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes — the ci/run_tests.sh --bench tier")
+    ap.add_argument("--skip-multiclass", action="store_true")
+    args = ap.parse_args()
+
+    scale = 0.125 if args.smoke else 1.0
+    rows: list = []
+    run(rows, scale=scale)
+    run_sharded(rows, scale=scale)
+    if not (args.smoke or args.skip_multiclass):
+        run_multiclass(rows)
     for r in rows:
         print(",".join(str(x) for x in r))
+    write_json(args.json)

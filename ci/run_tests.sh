@@ -4,6 +4,10 @@
 # Default: the FAST tier — everything except tests marked `slow` (the
 # 8-emulated-device subprocess tests, see pytest.ini).  Pass --all for the
 # full suite (what the tier-1 verify `python -m pytest -x -q` runs).
+# Pass --bench for the benchmark smoke tier instead of pytest: runs the
+# JSON-emitting SVM benchmark (benchmarks/bench_svm.py --smoke) at toy
+# size, including the sharded-build case on the 8 emulated devices, and
+# leaves BENCH_svm.json in the repo root for the perf trajectory.
 # Always prints the 10 slowest tests so tier creep stays visible.
 #
 # The distribution-layer tests (tests/test_dist.py, tests/test_fault.py,
@@ -19,13 +23,21 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 tier_args=(-m "not slow")
 pass_args=()
+bench=0
 for arg in "$@"; do
   if [[ "$arg" == "--all" ]]; then
     tier_args=()
+  elif [[ "$arg" == "--bench" ]]; then
+    bench=1
   else
     pass_args+=("$arg")
   fi
 done
+
+if [[ "$bench" == 1 ]]; then
+  exec python benchmarks/bench_svm.py --smoke --json BENCH_svm.json \
+    ${pass_args[@]+"${pass_args[@]}"}
+fi
 
 # ${arr[@]+...} idiom: empty-array expansion is an unbound-variable error
 # under `set -u` on bash < 4.4 (stock macOS bash 3.2)

@@ -1,9 +1,12 @@
-"""Distributed HSS-ADMM: the paper's solver sharded across devices.
+"""Mesh-parallel HSS-ADMM: build + factor + train sharded end-to-end.
 
 Runs on 8 emulated host devices (the same code lowers on the 256/512-chip
-production meshes — see launch/dryrun.py --arch svm-hss-admm).  Leaf-level
-factorization blocks are device-local; upper levels auto-replicate; ADMM
-vector work is data-parallel with psum reductions.
+production meshes — see launch/dryrun.py --arch svm-hss-admm).  Unlike the
+pre-engine flow (single-device compress/factorize, then device_put), EVERY
+stage here is mesh-parallel from the start: leaf kernel blocks, ID-QR bases,
+E/G factors, ADMM iterates, bias extraction and prediction scoring all live
+sharded over the node/sample axis — no device ever holds an unsharded
+O(N·m) array.
 
   PYTHONPATH=src python examples/distributed_svm.py
 """
@@ -19,8 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compression, factorization, tree as tree_mod
-from repro.core.distributed import admm_train_distributed
+from repro.core.compression import CompressionParams
+from repro.core.engine import HSSSVMEngine
 from repro.core.kernelfn import KernelSpec
 from repro.data import synthetic
 
@@ -28,27 +31,32 @@ from repro.data import synthetic
 def main():
     print(f"devices: {jax.device_count()}")
     n = 16384
-    x, y = synthetic.blobs(n, n_features=8, sep=1.8, seed=0)
-    t = tree_mod.build_tree(x, leaf_size=256)
-    xp = jnp.asarray(x[t.perm])
-    yp = jnp.asarray(y[t.perm])
+    xtr, ytr, xte, yte = synthetic.train_test(
+        "blobs", n, 2048, seed=0, n_features=8, sep=1.8)
 
-    hss = compression.compress(
-        xp, t, KernelSpec(h=1.0),
-        compression.CompressionParams(rank=32, n_near=48, n_far=64))
-    fac = factorization.factorize(hss, beta=100.0)
-
-    # compress once, factor once, sweep C data-parallel with warm starts —
-    # the paper's amortization claim, across devices via repro.dist
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
-    c_grid = [0.1, 1.0, 10.0]
-    results = admm_train_distributed(fac, yp, c_grid, mesh, max_it=10)
+    engine = HSSSVMEngine(
+        spec=KernelSpec(h=1.0),
+        comp=CompressionParams(rank=32, n_near=48, n_far=64),
+        leaf_size=256, beta=100.0, max_it=10, mesh=mesh)
 
-    for c, (z, res) in zip(c_grid, results):
-        z = jax.block_until_ready(z)
-        print(f"C={c:>5}: final primal residual {float(res[-1]):.2e}, "
-              f"support vectors {int(jnp.sum(z > 1e-6))} / {n}")
-    print(f"z sharding: {results[-1][0].sharding}")
+    rep = engine.prepare(xtr, ytr)     # sharded compress + factorize, ONCE
+    print(f"compress {rep.compression_s:.1f}s / factorize "
+          f"{rep.factorization_s:.2f}s / HSS memory {rep.memory_mb:.1f} MB "
+          f"across {jax.device_count()} devices")
+    shard = engine.fac.e_leaf.addressable_shards[0].data.shape
+    print(f"e_leaf: global {tuple(engine.fac.e_leaf.shape)}, "
+          f"per-device {tuple(shard)}")
+
+    # compress once, factor once, sweep C warm-started — the paper's
+    # amortization claim, with every stage mesh-parallel via the engine
+    c_grid = [0.1, 1.0, 10.0]
+    for c, model in zip(c_grid, engine.train_grid(c_grid)):
+        acc = float(jnp.mean(model.predict(jnp.asarray(xte)) == yte))
+        sv = int(jnp.sum(jnp.abs(model.z_y) > 1e-6))
+        print(f"C={c:>5}: holdout acc {acc:.4f}, "
+              f"support vectors {sv} / {n}")
+    print(f"z_y sharding: {model.z_y.sharding}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
 """The paper's contribution: HSS kernel approximation + ADMM SVM training."""
 
 from repro.core.admm import ADMMState, admm_svm, admm_svm_batched, paper_beta
-from repro.core.compression import CompressionParams, compress, compression_error
+from repro.core.compression import (
+    CompressionParams, compress, compress_sharded, compression_error,
+)
+from repro.core.engine import EngineModel, HSSSVMEngine
 from repro.core.factorization import (
-    HSSFactorization, factorize, hss_solve, hss_solve_mat,
+    HSSFactorization, factorize, factorize_sharded, hss_solve, hss_solve_mat,
 )
 from repro.core.hss import HSSMatrix
 from repro.core.kernelfn import KernelSpec, kernel_block
@@ -15,8 +18,10 @@ from repro.core.tree import ClusterTree, build_tree, pad_dataset
 
 __all__ = [
     "ADMMState", "admm_svm", "admm_svm_batched", "paper_beta",
-    "CompressionParams", "compress", "compression_error",
-    "HSSFactorization", "factorize", "hss_solve", "hss_solve_mat",
+    "CompressionParams", "compress", "compress_sharded", "compression_error",
+    "EngineModel", "HSSSVMEngine",
+    "HSSFactorization", "factorize", "factorize_sharded",
+    "hss_solve", "hss_solve_mat",
     "HSSMatrix", "KernelSpec", "kernel_block",
     "HSSSVMTrainer", "SVMModel", "grid_search",
     "MulticlassHSSSVMTrainer", "MulticlassSVMModel", "grid_search_multiclass",

@@ -1,10 +1,11 @@
-"""Distributed HSS-ADMM SVM training step (the paper's own dry-run cell).
+"""Distributed HSS-ADMM SVM training: shardings, C-grid drivers, mesh cell.
 
 Sample dimension d is sharded across ALL mesh devices (node-major): the
 leaf-level factorization arrays (E, G — O(N r) and O(N m)) live device-local;
-reduced-level arrays shard along the node axis until n_k < n_devices, where
-they auto-degrade to replicated (they are O(r^2 * n_k) — tiny).  The ADMM
-vector iterates are fully data-parallel; the only cross-device traffic is
+reduced-level arrays shard along the node axis until n_k stops dividing the
+device count, where they auto-degrade to replicated (they are O(r^2 * n_k) —
+tiny).  The ADMM vector iterates are fully data-parallel; the only
+cross-device traffic is
 
   * the level-transition pairings in the solve (collective-permute /
     all-gather of skeleton vectors, O(r * n_k) per level), and
@@ -12,6 +13,15 @@ vector iterates are fully data-parallel; the only cross-device traffic is
 
 exactly matching the communication pattern of distributed-memory HSS solvers
 (STRUMPACK's design, adapted to SPMD/pjit).
+
+Since the mesh-parallel build landed (``compression.compress_sharded`` /
+``factorization.factorize_sharded`` / ``core.engine.HSSSVMEngine``) the
+factorization arrives here already placed per ``fac_shardings`` — the C-grid
+drivers detect that and skip the legacy build-then-``device_put`` round-trip,
+so no stage of prepare→train ever materializes an unsharded O(N·m) array.
+``build_svm_cell`` exposes the same ADMM step both ways: as a
+ShapeDtypeStruct dry-run cell (launch/dryrun.py) and, given ``data=(x, y)``,
+as a real executable cell over a live sharded factorization.
 """
 from __future__ import annotations
 
@@ -62,23 +72,24 @@ def _node_axis(mesh: Mesh):
 
 
 def fac_shardings(fac_shapes: HSSFactorization, mesh: Mesh) -> Any:
-    """Node-axis sharding with replication fallback for small upper levels."""
-    nodes = _node_axis(mesh)
-    ndev = 1
-    for a in nodes:
-        ndev *= mesh.shape[a]
+    """Node-axis sharding with replication fallback for small upper levels.
+
+    Only the node-stacked (n_k, ·, ·) factor arrays shard; a level whose
+    node count does not divide the device count degrades to replicated (it
+    is O(r² n_k) — tiny).  The dense root LU/pivots are replicated outright:
+    every device needs them whole for the root solve.
+    """
+    from repro.dist.api import node_partition_spec
 
     def shard_nodes(leaf):
-        if leaf.ndim >= 1 and leaf.shape[0] % ndev == 0 and leaf.shape[0] > 1:
-            spec = (nodes,) + (None,) * (leaf.ndim - 1)
-        else:
-            spec = (None,) * leaf.ndim
-        return NamedSharding(mesh, PartitionSpec(*spec))
+        return NamedSharding(
+            mesh, node_partition_spec(mesh, leaf.ndim, leaf.shape[0]))
 
     return jax.tree.map(shard_nodes, fac_shapes)
 
 
-def vec_sharding(n: int, mesh: Mesh) -> NamedSharding:
+def vec_sharding(mesh: Mesh) -> NamedSharding:
+    """(n,) ADMM iterate vectors: the sample axis over all mesh devices."""
     return NamedSharding(mesh, PartitionSpec(_node_axis(mesh)))
 
 
@@ -126,7 +137,7 @@ def admm_train_distributed(
     the mesh.
     """
     n = y.shape[0]
-    v_sh = vec_sharding(n, mesh)
+    v_sh = vec_sharding(mesh)
     y_d = jax.device_put(jnp.asarray(y, jnp.float32), v_sh)
     beta = fac.beta
 
@@ -145,6 +156,21 @@ def admm_train_distributed(
                        warm_start)
 
 
+def _already_placed(fac, fac_sh) -> bool:
+    """True when every factor array already has its fac_shardings placement
+    (the mesh-parallel build emits it that way — no device_put needed)."""
+    for a, s in zip(jax.tree.leaves(fac), jax.tree.leaves(fac_sh)):
+        sh = getattr(a, "sharding", None)
+        if sh is None:
+            return False
+        try:
+            if not sh.is_equivalent_to(s, a.ndim):
+                return False
+        except (AttributeError, TypeError):
+            return False
+    return True
+
+
 def _run_c_grid(fac, labels_d, c_values, mesh, run, make_c, zeros,
                 warm_start) -> list:
     """Shared warm-started C-grid driver for the vector and (n, k) block
@@ -152,7 +178,7 @@ def _run_c_grid(fac, labels_d, c_values, mesh, run, make_c, zeros,
     from repro.dist import api as dist_api
 
     fac_sh = fac_shardings(jax.eval_shape(lambda: fac), mesh)
-    fac_d = jax.device_put(fac, fac_sh)
+    fac_d = fac if _already_placed(fac, fac_sh) else jax.device_put(fac, fac_sh)
     z0, mu0 = zeros, zeros
     out = []
     with dist_api.use_mesh(mesh), mesh:
@@ -219,17 +245,51 @@ def admm_train_multiclass_distributed(
 
 def build_svm_cell(mesh: Mesh, n: int = 1 << 22, leaf: int = 256,
                    rank: int = 64, beta: float = 1e4, max_it: int = 10,
-                   dtype=jnp.float32, solve_dtype=None):
-    """(fn, arg_shapes, in_shardings) for the SVM distributed dry-run cell.
+                   dtype=jnp.float32, solve_dtype=None, data=None,
+                   spec=None, comp=None, c_value: float = 1.0):
+    """(fn, args, in_shardings) for the SVM distributed training cell.
 
-    Default n = 4.2M samples — the susy-scale regime (paper Table 1's largest
-    dataset is 3.5M) padded to a perfect tree.
+    Without ``data`` this is the dry-run cell: ``args`` are
+    ShapeDtypeStructs for an n-point problem (default n = 4.2M samples — the
+    susy-scale regime; paper Table 1's largest dataset is 3.5M) and the cell
+    is lower/compile-only (launch/dryrun.py); the third arg is the scalar C.
+
+    With ``data=(x, y)`` the cell runs FOR REAL: a thin wrapper over
+    ``core.engine.HSSSVMEngine`` builds the sharded compression +
+    factorization under ``mesh`` and ``args`` are live mesh-resident arrays
+    — (factorization, permuted labels, per-coordinate C upper bound) with
+    the bound equal to ``c_value`` on real points and 0 on pads — so
+    ``jax.jit(fn, in_shardings=in_sh)(*args)`` trains that C end-to-end
+    with every stage node-sharded.  To sweep C, rescale:
+    ``fn(fac, y, new_c / c_value * args[2])``.  ``spec``/``comp`` override
+    the kernel and compression accuracy knobs (engine defaults otherwise).
     """
-    fac_shapes = factorization_shapes(n, leaf, rank, dtype=dtype)
-    fac_sh = fac_shardings(fac_shapes, mesh)
-    y_shape = jax.ShapeDtypeStruct((n,), jnp.float32)
-    c_shape = jax.ShapeDtypeStruct((), jnp.float32)
-    in_sh = (fac_sh, vec_sharding(n, mesh),
-             NamedSharding(mesh, PartitionSpec()))
     fn = make_distributed_admm_step(beta, max_it, solve_dtype=solve_dtype)
-    return fn, (fac_shapes, y_shape, c_shape), in_sh
+    if data is None:
+        fac_shapes = factorization_shapes(n, leaf, rank, dtype=dtype)
+        fac_sh = fac_shardings(fac_shapes, mesh)
+        y_shape = jax.ShapeDtypeStruct((n,), jnp.float32)
+        c_shape = jax.ShapeDtypeStruct((), jnp.float32)
+        in_sh = (fac_sh, vec_sharding(mesh),
+                 NamedSharding(mesh, PartitionSpec()))
+        return fn, (fac_shapes, y_shape, c_shape), in_sh
+
+    from repro.core.compression import CompressionParams
+    from repro.core.engine import HSSSVMEngine
+    from repro.core.kernelfn import KernelSpec
+
+    x, y = data
+    eng = HSSSVMEngine(
+        spec=spec if spec is not None else KernelSpec(h=1.0),
+        comp=comp if comp is not None else CompressionParams(rank=rank),
+        leaf_size=leaf, beta=beta, max_it=max_it, mesh=mesh,
+        store_dtype=(None if jnp.dtype(dtype) == jnp.float32
+                     else jnp.dtype(dtype).name),
+    )
+    eng.prepare(x, y)
+    v_sh = vec_sharding(mesh)
+    y_d = jax.device_put(eng.problem_labels[0], v_sh)
+    c_vec = jax.device_put(c_value * eng.problem_masks[0], v_sh)   # pads -> 0
+    fac = eng.fac
+    in_sh = (fac_shardings(jax.eval_shape(lambda: fac), mesh), v_sh, v_sh)
+    return fn, (fac, y_d, c_vec), in_sh

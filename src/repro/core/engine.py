@@ -1,0 +1,355 @@
+"""One orchestration layer for the whole HSS-ADMM SVM pipeline.
+
+``HSSSVMEngine`` owns every stage of paper Algorithm 3 — partition (pad +
+cluster tree) → HSS compression → ULV-equivalent factorization → batched
+ADMM → bias → prediction — through ONE code path for both the local
+single-device case and the mesh-parallel case:
+
+  * ``mesh=None``: the stages are exactly ``compression.compress`` /
+    ``factorization.factorize`` / ``admm_svm_batched`` on one device.
+  * ``mesh=Mesh(...)``: the SAME stages run node/sample-sharded end-to-end
+    (``compress_sharded`` / ``factorize_sharded``), so no stage ever
+    materializes an unsharded O(N·m) array on a single device — the leaf
+    diagonal blocks, leaf bases, E/G factors, label matrix, and ADMM
+    iterates all live sharded over the full device set from the moment they
+    are created.  Bias extraction and prediction scoring also run on the
+    sharded representation (one ``psum`` of per-device partial scores)
+    without ever gathering ``x_perm``.
+
+Binary problems (labels ±1) and k-class problems (arbitrary labels, OVR or
+OVO reduction) share the path: the engine always trains the (d, P)-block
+batched ADMM with P = 1 for binary — the multiclass economy of
+``core.multiclass`` with the distribution of ``core.distributed``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.core import admm as admm_mod
+from repro.core import compression, factorization, tree as tree_mod
+from repro.core.hss import HSSMatrix
+from repro.core.kernelfn import KernelSpec, kernel_matvec_streamed
+from repro.core.multiclass import ovo_problems, ovo_vote, ovr_problems
+from repro.core.svm import FitReport, compute_bias_batched
+from repro.dist import api as dist_api
+from repro.dist.api import mesh_ndev
+
+Array = jax.Array
+
+
+def _node_spec(mesh: Mesh) -> PartitionSpec:
+    return PartitionSpec(tuple(mesh.axis_names))
+
+
+@dataclasses.dataclass
+class EngineModel:
+    """A trained (binary or k-class) classifier, possibly mesh-resident.
+
+    ``x_perm``/``z_y`` stay sharded over the mesh's sample axis when the
+    model was trained under one; scoring then evaluates each device's
+    test×local-support kernel blocks and psums the partial scores — the
+    support set is never gathered to one device.
+    """
+
+    x_perm: Array          # (d, f) padded+permuted training points
+    z_y: Array             # (d, P) per-problem y_i * z_i columns (pads are 0)
+    biases: Array          # (P,)
+    classes: np.ndarray    # (k,) original class labels
+    spec: KernelSpec
+    c_value: float
+    binary: bool
+    strategy: str = "ovr"
+    pairs: np.ndarray | None = None     # (P, 2) class indices, ovo only
+    mesh: Mesh | None = None
+    _score_fns: dict | None = None      # block -> cached jitted scorer
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.classes.shape[0])
+
+    def _mesh_scorer(self, block: int):
+        if self._score_fns is None:
+            self._score_fns = {}
+        fn = self._score_fns.get(block)
+        if fn is None:
+            spec, mesh = self.spec, self.mesh
+            axes = tuple(mesh.axis_names)
+
+            def body(xt, xp, zy):
+                part = kernel_matvec_streamed(spec, xt, xp, zy, block=block)
+                return jax.lax.psum(part, axes)
+
+            fn = jax.jit(dist_api.shard_map(
+                body, mesh,
+                in_specs=(PartitionSpec(), _node_spec(mesh),
+                          _node_spec(mesh)),
+                out_specs=PartitionSpec()))
+            self._score_fns[block] = fn
+        return fn
+
+    def decision_function(self, x_test: Array, block: int = 2048) -> Array:
+        """Scores (n_test, P); for binary models the single column (n_test,)."""
+        x_test = jnp.asarray(x_test)
+        if self.mesh is None:
+            scores = kernel_matvec_streamed(
+                self.spec, x_test, self.x_perm, self.z_y, block=block)
+        else:
+            scores = self._mesh_scorer(block)(x_test, self.x_perm, self.z_y)
+        scores = scores + self.biases[None, :]
+        return scores[:, 0] if self.binary else scores
+
+    def predict(self, x_test: Array, block: int = 2048) -> Array:
+        scores = self.decision_function(x_test, block=block)
+        if self.binary:
+            return jnp.where(scores >= 0, 1, -1)
+        if self.strategy == "ovr":
+            idx = jnp.argmax(scores, axis=1)
+        else:
+            idx = ovo_vote(scores, self.pairs, self.n_classes)
+        return jnp.asarray(self.classes)[idx]
+
+
+@dataclasses.dataclass
+class HSSSVMEngine:
+    """partition → compress → factorize → ADMM → bias/predict, local or mesh.
+
+    The paper's compress-once / factor-once / train-many economy, owned by
+    one object; pass ``mesh`` to run every stage sharded (see module
+    docstring).  ``store_dtype="bfloat16"`` stores the E/G factors in bf16
+    (solves still accumulate in f32).
+    """
+
+    spec: KernelSpec
+    comp: compression.CompressionParams = dataclasses.field(
+        default_factory=compression.CompressionParams
+    )
+    leaf_size: int = 128
+    beta: float | None = None     # default: the paper's rule by dataset size
+    max_it: int = 10
+    mesh: Mesh | None = None
+    strategy: str = "ovr"         # multiclass reduction: "ovr" | "ovo"
+    store_dtype: str | None = None
+
+    # populated by prepare():
+    _hss: HSSMatrix | None = None
+    _fac: factorization.HSSFactorization | None = None
+    _ys: Array | None = None       # (P, d) per-problem ±1 labels
+    _pmask: Array | None = None    # (P, d) participation masks
+    _classes: np.ndarray | None = None
+    _pairs: np.ndarray | None = None
+    _binary: bool = False
+    _report: FitReport | None = None
+    _jit_admm: object = None
+    _jit_bias: object = None
+    # The EFFECTIVE mesh: self.mesh, or None when the tree cannot shard
+    # evenly over it (non-power-of-two device count) — then every stage
+    # falls back to the local path instead of crashing on placement.
+    _mesh: Mesh | None = None
+
+    # ------------------------------------------------------------------ #
+    @contextlib.contextmanager
+    def _active(self):
+        """The mesh context all jitted stages trace/run under (no-op local)."""
+        if self._mesh is None:
+            yield
+        else:
+            with dist_api.use_mesh(self._mesh), self._mesh:
+                yield
+
+    def _min_levels(self) -> int:
+        """Force enough splits that the leaf axis divides the device count."""
+        if self.mesh is None:
+            return 0
+        ndev = mesh_ndev(self.mesh)
+        if ndev & (ndev - 1):
+            return 0            # non-power-of-two mesh: local-build fallback
+        levels = 0
+        while 2 ** levels < ndev:
+            levels += 1
+        return levels
+
+    # ------------------------------------------------------------------ #
+    def prepare(self, x: np.ndarray, y: np.ndarray) -> FitReport:
+        """Pad + tree + compress ONCE + factorize ONCE (Alg. 3 lines 1–6)."""
+        if self.strategy not in ("ovr", "ovo"):
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y)
+        classes = np.unique(y)
+        if classes.shape[0] < 2:
+            raise ValueError("need at least 2 classes")
+        try:
+            vals = set(np.asarray(classes, np.float64).tolist())
+        except (TypeError, ValueError):
+            vals = set()
+        self._binary = classes.shape[0] == 2 and vals == {-1.0, 1.0}
+        d_real = x.shape[0]
+        x_pad, y_pad, mask, levels = tree_mod.pad_dataset(
+            x, y.astype(np.float32), self.leaf_size,
+            min_levels=self._min_levels())
+        mesh = self.mesh
+        if mesh is not None and (2 ** levels) % mesh_ndev(mesh) != 0:
+            mesh = None         # un-shardable leaf count: run the local path
+        self._mesh = mesh
+        t = tree_mod.build_tree(x_pad, self.leaf_size, levels)
+        xp_host = x_pad[t.perm]
+        yp = y_pad[t.perm]
+        maskp = mask[t.perm]
+
+        if self._binary:
+            ys = np.where(yp > 0, 1.0, -1.0)[None, :].astype(np.float32)
+            pmasks = maskp[None, :].astype(np.float32)
+            pairs = None
+        else:
+            build = ovr_problems if self.strategy == "ovr" else ovo_problems
+            ys, pmasks, pairs = build(yp, classes.astype(np.float32), maskp)
+
+        t0 = time.perf_counter()
+        if mesh is not None:
+            hss = compression.compress_sharded(
+                xp_host, t, self.spec, self.comp, mesh)
+        else:
+            hss = compression.compress(
+                jnp.asarray(xp_host), t, self.spec, self.comp)
+        jax.block_until_ready(hss.d_leaf)
+        t1 = time.perf_counter()
+        beta = self.beta if self.beta is not None else admm_mod.paper_beta(
+            d_real)
+        if mesh is not None:
+            fac = factorization.factorize_sharded(
+                hss, beta, mesh, store_dtype=self.store_dtype)
+        else:
+            fac = factorization.factorize(
+                hss, beta, store_dtype=self.store_dtype)
+        jax.block_until_ready(fac.root_lu)
+        t2 = time.perf_counter()
+
+        if mesh is not None:
+            row_sh = NamedSharding(
+                mesh, PartitionSpec(None, tuple(mesh.axis_names)))
+            ys_d = jax.device_put(jnp.asarray(ys), row_sh)
+            pm_d = jax.device_put(jnp.asarray(pmasks), row_sh)
+        else:
+            ys_d, pm_d = jnp.asarray(ys), jnp.asarray(pmasks)
+
+        self._hss, self._fac = hss, fac
+        self._ys, self._pmask = ys_d, pm_d
+        self._classes, self._pairs = classes, pairs
+        self._jit_admm = self._jit_bias = None
+        self._report = FitReport(
+            compression_s=t1 - t0,
+            factorization_s=t2 - t1,
+            admm_s=0.0,
+            memory_mb=hss.memory_bytes() / 1e6,
+            hss_levels=t.levels,
+            beta=beta,
+        )
+        return self._report
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_problems(self) -> int:
+        assert self._ys is not None, "call prepare() first"
+        return int(self._ys.shape[0])
+
+    @property
+    def problem_labels(self) -> Array:
+        """(P, d) per-problem ±1 labels in tree order (mesh-placed)."""
+        assert self._ys is not None, "call prepare() first"
+        return self._ys
+
+    @property
+    def problem_masks(self) -> Array:
+        """(P, d) participation masks (0 pins a coordinate to the [0,0] box)."""
+        assert self._pmask is not None, "call prepare() first"
+        return self._pmask
+
+    @property
+    def hss(self) -> HSSMatrix:
+        assert self._hss is not None, "call prepare() first"
+        return self._hss
+
+    @property
+    def fac(self) -> factorization.HSSFactorization:
+        assert self._fac is not None, "call prepare() first"
+        return self._fac
+
+    @property
+    def report(self) -> FitReport:
+        assert self._report is not None
+        return self._report
+
+    # ------------------------------------------------------------------ #
+    def train(self, c_value: float, warm: tuple[Array, Array] | None = None
+              ) -> tuple[EngineModel, tuple[Array, Array]]:
+        """ONE batched ADMM run over all P subproblems for a fixed C."""
+        assert self._fac is not None, "call prepare() first"
+        fac, ys, pmask = self._fac, self._ys, self._pmask
+        n_prob, d = ys.shape
+
+        if self._jit_admm is None:
+            max_it = self.max_it
+
+            def _run(fac_, ys_, c_upper_, z0, mu0):
+                state, trace = admm_mod.admm_svm_batched(
+                    fac_.solve_mat, ys_, c_upper_, fac_.beta, max_it,
+                    z0=z0, mu0=mu0)
+                return state.z, state.mu, ys_.T * state.z, trace.primal_res
+
+            self._jit_admm = jax.jit(_run)
+            self._jit_bias = jax.jit(compute_bias_batched)
+
+        if self._mesh is None:
+            zeros = jnp.zeros((d, n_prob), jnp.float32)
+        else:
+            zeros = jax.device_put(
+                jnp.zeros((d, n_prob), jnp.float32),
+                NamedSharding(self._mesh, PartitionSpec(
+                    tuple(self._mesh.axis_names), None)))
+        z0, mu0 = (zeros, zeros) if warm is None else warm
+
+        with self._active():
+            t0 = time.perf_counter()
+            z, mu, z_y, _res = self._jit_admm(
+                fac, ys, c_value * pmask, z0, mu0)
+            jax.block_until_ready(z)
+            t1 = time.perf_counter()
+            biases = self._jit_bias(
+                self._hss, ys.T, z, c_value * pmask.T, pmask.T)
+        if self._report is not None:
+            self._report.admm_s += t1 - t0
+
+        model = EngineModel(
+            x_perm=self._hss.x, z_y=z_y, biases=biases,
+            classes=self._classes, spec=self.spec, c_value=c_value,
+            binary=self._binary, strategy=self.strategy, pairs=self._pairs,
+            mesh=self._mesh,
+        )
+        return model, (z, mu)
+
+    # ------------------------------------------------------------------ #
+    def train_grid(self, c_values: Sequence[float], warm_start: bool = True
+                   ) -> list[EngineModel]:
+        """Warm-started C sweep reusing the one compression+factorization."""
+        warm = None
+        models = []
+        for c in c_values:
+            model, w = self.train(float(c), warm=warm)
+            if warm_start:
+                warm = w
+            models.append(model)
+        return models
+
+    def fit(self, x: np.ndarray, y: np.ndarray, c_value: float = 1.0
+            ) -> EngineModel:
+        self.prepare(x, y)
+        model, _ = self.train(c_value)
+        return model

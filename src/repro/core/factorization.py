@@ -152,6 +152,76 @@ def factorize(hss: HSSMatrix, beta: float,
     )
 
 
+def factorize_sharded(hss: HSSMatrix, beta: float, mesh,
+                      store_dtype: str | None = None) -> HSSFactorization:
+    """Mesh-parallel ``factorize``: E/G emitted already placed per level.
+
+    The level loop is numerically identical to ``factorize`` but runs as ONE
+    jitted program whose per-level arrays are pinned (via sharding
+    constraints) to the ``distributed.fac_shardings`` layout: leaf and
+    lower-level factors stay device-local along the node axis (zero
+    communication — every EGD̂ block is an independent small dense solve),
+    and ``_assemble_next``'s child-pairing reshape at the first level whose
+    node count stops dividing the device count lowers to the one all-gather
+    of the (tiny, O(r² n_k)) reduced blocks — the same collective schedule as
+    ``hss_solve_mat``.  The result needs NO build-then-``device_put``
+    round-trip: ``_run_c_grid`` detects the placement and skips it.
+
+    Works on an ``hss`` whose arrays are themselves sharded
+    (``compression.compress_sharded``) or local; parity with ``factorize``
+    is tested to <=1e-5 in tests/test_engine.py.
+    """
+    from jax.sharding import NamedSharding
+
+    from repro.dist.api import node_partition_spec
+
+    K, m = hss.levels, hss.leaf_size
+    if K == 0:
+        return factorize(hss, beta, store_dtype=store_dtype)
+
+    def pin(a):
+        # The one shared placement rule (dist.api.node_partition_spec):
+        # node-stacked arrays shard along the node axis when it divides the
+        # device count; everything else (root LU, pivots) replicates.
+        return jax.lax.with_sharding_constraint(
+            a, NamedSharding(mesh, node_partition_spec(mesh, a.ndim,
+                                                       a.shape[0])))
+
+    sd = None if store_dtype is None else jnp.dtype(store_dtype)
+
+    @jax.jit
+    def _build(d_leaf, u_leaf, transfers, b_mats):
+        dtype = d_leaf.dtype
+        d_shift = pin(d_leaf) + beta * jnp.eye(m, dtype=dtype)
+        e_leaf, g_leaf, d_hat = _leaf_factors(d_shift, pin(u_leaf))
+        e_leaf, g_leaf, d_hat = pin(e_leaf), pin(g_leaf), pin(d_hat)
+        e_lvls, g_lvls = [], []
+        for k in range(1, K):
+            d_blk = pin(_assemble_next(d_hat, pin(b_mats[k - 1])))
+            e_k, g_k, d_hat = _level_factors(d_blk, pin(transfers[k - 1]))
+            e_k, g_k, d_hat = pin(e_k), pin(g_k), pin(d_hat)
+            e_lvls.append(e_k)
+            g_lvls.append(g_k)
+        root = _assemble_next(d_hat, b_mats[K - 1])[0]
+        lu, piv = jsl.lu_factor(root)
+        lu, piv = pin(lu), pin(piv)
+        if sd is not None:
+            e_leaf, g_leaf = e_leaf.astype(sd), g_leaf.astype(sd)
+            e_lvls = [pin(a.astype(sd)) for a in e_lvls]
+            g_lvls = [pin(a.astype(sd)) for a in g_lvls]
+        return (pin(e_leaf), pin(g_leaf), tuple(e_lvls), tuple(g_lvls),
+                lu, piv)
+
+    e_leaf, g_leaf, e_lvls, g_lvls, lu, piv = _build(
+        hss.d_leaf, hss.u_leaf, hss.transfers, hss.b_mats)
+    return HSSFactorization(
+        e_leaf=e_leaf, g_leaf=g_leaf,
+        e_lvls=e_lvls, g_lvls=g_lvls,
+        root_lu=lu, root_piv=piv,
+        levels=K, leaf_size=m, beta=beta,
+    )
+
+
 def hss_solve(fac: HSSFactorization, b: Array) -> Array:
     """x = (K̃ + beta I)^{-1} b in O(N r): single-RHS view of the block sweep."""
     return hss_solve_mat(fac, b[:, None])[:, 0]
@@ -164,22 +234,38 @@ def hss_solve_mat(fac: HSSFactorization, b: Array) -> Array:
     so all c columns (ADMM iterates of c classes, or a warm-started C grid)
     share a single pass over the E/G factors — the multiclass analogue of
     the paper's factor-once/solve-many economy.
+
+    Every per-level contraction pins ``preferred_element_type=float32``:
+    with ``store_dtype="bfloat16"`` the E/G factors are bf16 and implicit
+    promotion alone would leave the accumulator dtype to the backend's
+    discretion — the f32 accumulation is what makes the bf16 storage mode
+    a pure bandwidth win instead of an accuracy cliff (regression-tested in
+    tests/test_factorization.py).
     """
+    from repro.dist.api import constrain_nodes
+
     K, m = fac.levels, fac.leaf_size
     c = b.shape[1]
     if K == 0:
         return jsl.cho_solve((fac.root_lu, True), b)
 
+    f32 = jnp.float32
     n_leaf = fac.e_leaf.shape[0]
     b0 = b.reshape(n_leaf, m, c)
-    # Upward sweep: project the RHS through Eᵀ level by level.
+    # Upward sweep: project the RHS through Eᵀ level by level.  Under an
+    # active mesh every per-level block is pinned to the fac_shardings
+    # layout (constrain_nodes) so the pair/unpair reshapes lower to the
+    # designed per-level collective schedule.
     bs = [b0]
-    bt = jnp.einsum("nmr,nmc->nrc", fac.e_leaf, b0)
+    bt = constrain_nodes(
+        jnp.einsum("nmr,nmc->nrc", fac.e_leaf, b0, preferred_element_type=f32))
     for k in range(1, K):
         n_k = fac.e_lvls[k - 1].shape[0]
         b_k = bt.reshape(n_k, -1, c)                        # (n_k, 2 r_{k-1}, c)
         bs.append(b_k)
-        bt = jnp.einsum("nsr,nsc->nrc", fac.e_lvls[k - 1], b_k)
+        bt = constrain_nodes(
+            jnp.einsum("nsr,nsc->nrc", fac.e_lvls[k - 1], b_k,
+                       preferred_element_type=f32))
     b_root = bt.reshape(-1, c)
     # root stays f32 regardless of the factor storage dtype
     x_root = jsl.lu_solve(
@@ -191,12 +277,15 @@ def hss_solve_mat(fac: HSSFactorization, b: Array) -> Array:
     for k in range(K - 1, 0, -1):
         b_k = bs[k]
         x_k = (
-            jnp.einsum("nsd,ndc->nsc", fac.g_lvls[k - 1], b_k)
-            + jnp.einsum("nsr,nrc->nsc", fac.e_lvls[k - 1], xi)
+            jnp.einsum("nsd,ndc->nsc", fac.g_lvls[k - 1], b_k,
+                       preferred_element_type=f32)
+            + jnp.einsum("nsr,nrc->nsc", fac.e_lvls[k - 1], xi,
+                         preferred_element_type=f32)
         )
-        xi = x_k.reshape(-1, x_k.shape[1] // 2, c)          # children skeleton
+        xi = constrain_nodes(
+            x_k.reshape(-1, x_k.shape[1] // 2, c))          # children skeleton
     x0 = (
-        jnp.einsum("nab,nbc->nac", fac.g_leaf, b0)
-        + jnp.einsum("nmr,nrc->nmc", fac.e_leaf, xi)
+        jnp.einsum("nab,nbc->nac", fac.g_leaf, b0, preferred_element_type=f32)
+        + jnp.einsum("nmr,nrc->nmc", fac.e_leaf, xi, preferred_element_type=f32)
     )
     return x0.reshape(-1, c)

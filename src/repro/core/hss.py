@@ -80,21 +80,39 @@ class HSSMatrix:
         einsum (no ``jax.vmap`` over single-RHS sweeps), so the k per-class
         vectors of a multiclass problem cost one pass over the HSS factors
         instead of k.
+
+        All contractions accumulate in f32 (``preferred_element_type``) so a
+        bf16-stored representation still produces f32-quality sweeps.
+
+        Under an active ``repro.dist.api.use_mesh`` every per-level
+        intermediate is pinned to the node-sharded/replicated layout of
+        ``distributed.fac_shardings`` (``constrain_nodes``) — the pair/unpair
+        reshapes then lower to the same per-level collective schedule as the
+        distributed solve, and the sweep stays correct under SPMD
+        partitioning.
         """
+        from repro.dist.api import constrain_nodes
+
         K = self.levels
         n_leaf, m = self.n_leaves, self.leaf_size
         c = v.shape[1]
+        f32 = jnp.float32
         vl = v.reshape(n_leaf, m, c)
-        diag = jnp.einsum("nab,nbc->nac", self.d_leaf, vl)
+        diag = jnp.einsum("nab,nbc->nac", self.d_leaf, vl,
+                          preferred_element_type=f32)
         if K == 0:
             return diag.reshape(-1, c)
 
         # Upward: project into skeleton coordinates at every level.
-        vt = [jnp.einsum("nmr,nmc->nrc", self.u_leaf, vl)]  # (n_leaf, r0, c)
+        vt = [constrain_nodes(
+            jnp.einsum("nmr,nmc->nrc", self.u_leaf, vl,
+                       preferred_element_type=f32))]        # (n_leaf, r0, c)
         for k in range(1, K):
             t = self.transfers[k - 1]                       # (n_k, 2 r_{k-1}, r_k)
             prev = vt[-1].reshape(t.shape[0], t.shape[1], c)  # pair children
-            vt.append(jnp.einsum("nsr,nsc->nrc", t, prev))
+            vt.append(constrain_nodes(
+                jnp.einsum("nsr,nsc->nrc", t, prev,
+                           preferred_element_type=f32)))
 
         # Downward: accumulate incoming far-field per node, top level first.
         w = None
@@ -103,18 +121,23 @@ class HSSMatrix:
             pair = vt[k - 1].reshape(b.shape[0], 2, b.shape[1], c)
             coup = jnp.stack(
                 [
-                    jnp.einsum("nij,njc->nic", b, pair[:, 1]),
-                    jnp.einsum("nji,njc->nic", b, pair[:, 0]),
+                    jnp.einsum("nij,njc->nic", b, pair[:, 1],
+                               preferred_element_type=f32),
+                    jnp.einsum("nji,njc->nic", b, pair[:, 0],
+                               preferred_element_type=f32),
                 ],
                 axis=1,
             )                                               # (n_k, 2, r_{k-1}, c)
             if w is not None:
                 t = self.transfers[k - 1]
-                down = jnp.einsum("nsr,nrc->nsc", t, w)     # (n_k, 2 r_{k-1}, c)
-                coup = coup + down.reshape(coup.shape)
-            w = coup.reshape(-1, coup.shape[-2], c)         # (n_{k-1}, r_{k-1}, c)
+                down = jnp.einsum("nsr,nrc->nsc", t, w,
+                                  preferred_element_type=f32)
+                coup = coup + down.reshape(coup.shape)      # (n_k, 2 r_{k-1}, c)
+            w = constrain_nodes(
+                coup.reshape(-1, coup.shape[-2], c))        # (n_{k-1}, r_{k-1}, c)
 
-        out = diag + jnp.einsum("nmr,nrc->nmc", self.u_leaf, w)
+        out = diag + jnp.einsum("nmr,nrc->nmc", self.u_leaf, w,
+                                preferred_element_type=f32)
         return out.reshape(-1, c)
 
     # ------------------------------------------------------------------ #

@@ -66,6 +66,23 @@ def ovo_problems(y: np.ndarray, classes: np.ndarray, real_mask: np.ndarray
             pairs)
 
 
+def ovo_vote(scores: Array, pairs: np.ndarray, n_classes: int) -> Array:
+    """One-vs-one decision: (n_test, P) pair scores -> (n_test,) class indices.
+
+    Each pair votes for its winner; vote ties break toward the larger summed
+    functional margin.  Shared by the multiclass trainer's model and the
+    engine's (core.engine.EngineModel) so the tie-break can never drift.
+    """
+    pairs = jnp.asarray(pairs)
+    winner = jnp.where(scores >= 0, pairs[:, 0][None, :],
+                       pairs[:, 1][None, :])
+    votes = jax.nn.one_hot(winner, n_classes).sum(axis=1)
+    margin = jnp.zeros_like(votes)
+    margin = margin.at[:, pairs[:, 0]].add(scores)
+    margin = margin.at[:, pairs[:, 1]].add(-scores)
+    return jnp.argmax(votes + 1e-3 * jnp.tanh(margin), axis=1)
+
+
 @dataclasses.dataclass
 class MulticlassSVMModel:
     """k-class classifier: per-problem support coefficients, permuted order."""
@@ -94,16 +111,8 @@ class MulticlassSVMModel:
         scores = self.decision_function(x_test, block=block)
         if self.strategy == "ovr":
             idx = jnp.argmax(scores, axis=1)
-        else:  # ovo: each pair votes for its winner, argmax of vote counts
-            pairs = jnp.asarray(self.pairs)
-            winner = jnp.where(scores >= 0, pairs[:, 0][None, :],
-                               pairs[:, 1][None, :])
-            votes = jax.nn.one_hot(winner, self.n_classes).sum(axis=1)
-            # break vote ties toward the larger summed margin
-            margin = jnp.zeros_like(votes)
-            margin = margin.at[:, pairs[:, 0]].add(scores)
-            margin = margin.at[:, pairs[:, 1]].add(-scores)
-            idx = jnp.argmax(votes + 1e-3 * jnp.tanh(margin), axis=1)
+        else:
+            idx = ovo_vote(scores, self.pairs, self.n_classes)
         return jnp.asarray(self.classes)[idx]
 
 

@@ -88,7 +88,7 @@ def padded_size(n: int, leaf_size: int) -> tuple[int, int]:
 
 
 def pad_dataset(
-    x: np.ndarray, y: np.ndarray, leaf_size: int
+    x: np.ndarray, y: np.ndarray, leaf_size: int, min_levels: int = 0
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Pad (x, y) with mutually-far inert points to a perfect-tree size.
 
@@ -96,9 +96,16 @@ def pad_dataset(
     diameter, so every Gaussian kernel value involving a pad (including
     pad-pad for distinct pads) underflows to ~0 and the padded kernel matrix
     is blockdiag(K_real, ~I).  Returns (x_pad, y_pad, real_mask, levels).
+
+    ``min_levels`` forces at least that many splits — the mesh-parallel
+    build (core.engine) uses it to guarantee the leaf count divides the
+    device count, at the cost of a few more inert leaves.
     """
     n = x.shape[0]
     n_pad_total, levels = padded_size(n, leaf_size)
+    if min_levels > levels:
+        levels = min_levels
+        n_pad_total = leaf_size * 2 ** levels
     n_extra = n_pad_total - n
     if n_extra == 0:
         return x, y, np.ones(n, dtype=bool), levels

@@ -119,6 +119,50 @@ def constrain(x: jax.Array, spec: tuple) -> jax.Array:
         x, NamedSharding(mesh, PartitionSpec(*resolved)))
 
 
+def mesh_ndev(mesh: Mesh) -> int:
+    """Total device count of a mesh (all axes combined)."""
+    return _axes_size(mesh, tuple(mesh.axis_names))
+
+
+def node_partition_spec(mesh: Mesh, ndim: int, dim0: int) -> PartitionSpec:
+    """THE node-axis placement rule, shared by every layer of the HSS stack.
+
+    Node-stacked arrays — (n_nodes, ·, ·) per-level blocks — shard their
+    leading axis over ALL mesh axes when it divides the device count;
+    everything else (small upper levels, the dense root LU/pivots, vectors
+    handled elsewhere) replicates.  ``distributed.fac_shardings``,
+    ``factorization.factorize_sharded`` and ``constrain_nodes`` all defer
+    here so the rule can never drift between the build, the placement, and
+    the solve's intermediate constraints.
+    """
+    if ndim >= 3 and dim0 % mesh_ndev(mesh) == 0 and dim0 > 1:
+        return PartitionSpec(tuple(mesh.axis_names), *([None] * (ndim - 1)))
+    return PartitionSpec(*([None] * ndim))
+
+
+def constrain_nodes(x: jax.Array) -> jax.Array:
+    """Pin the leading (node/sample) axis to the active mesh's full device set.
+
+    The HSS per-level sweeps (``HSSMatrix.matmat``, ``hss_solve_mat``) are
+    chains of pair/unpair reshapes across the node axis; left to sharding
+    propagation alone, XLA's SPMD partitioner picks layouts for the small
+    upper-level intermediates that (on some backends/versions) miscompile
+    the interleaving reshapes.  This helper pins every per-level intermediate
+    to the one layout the distributed solver is designed around: leading dim
+    sharded over ALL mesh axes when it divides the device count, replicated
+    otherwise — the exact rule of ``core.distributed.fac_shardings``.
+
+    No-op outside a ``use_mesh`` context, so local single-device code paths
+    are untouched.
+    """
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, node_partition_spec(mesh, x.ndim, x.shape[0])))
+
+
 def shard_map(f, mesh: Mesh, in_specs, out_specs, check_vma: bool = False):
     """Version-compatible shard_map.
 

@@ -6,10 +6,12 @@
   PYTHONPATH=src python -m repro.launch.serve --task svm \
       --svm-classes 4 --svm-train 8192 --batch 256 --requests 50
 
-The SVM path trains a k-class model on ONE shared HSS factorization
-(repro.core.multiclass), then serves score/predict requests with the
-streamed block-kernel evaluator — each request batch costs one pass over
-the support set for ALL k classes.
+The SVM path trains a k-class model on ONE shared HSS factorization via
+the unified engine (repro.core.engine.HSSSVMEngine; pass --svm-mesh to
+build and serve sharded over all local devices), then serves score/predict
+requests with the streamed block-kernel evaluator — each request batch
+costs one pass over the support set for ALL k classes, and under a mesh
+each device scores only its local support shard (one psum per batch).
 """
 from __future__ import annotations
 
@@ -72,8 +74,8 @@ def serve_lm(args) -> None:
 
 def serve_svm(args) -> None:
     from repro.core.compression import CompressionParams
+    from repro.core.engine import HSSSVMEngine
     from repro.core.kernelfn import KernelSpec
-    from repro.core.multiclass import MulticlassHSSSVMTrainer
     from repro.data import synthetic
 
     xtr, ytr, xte, yte = synthetic.train_test(
@@ -81,15 +83,20 @@ def serve_svm(args) -> None:
         n_test=max(args.batch, 512), seed=0,
         n_classes=args.svm_classes, sep=3.0)
 
+    mesh = None
+    if args.svm_mesh and jax.device_count() > 1:
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        print(f"mesh-parallel build over {jax.device_count()} devices")
+
     t0 = time.time()
-    trainer = MulticlassHSSSVMTrainer(
+    engine = HSSSVMEngine(
         spec=KernelSpec(h=args.svm_h),
         comp=CompressionParams(rank=32, n_near=48, n_far=64),
-        leaf_size=256, max_it=10)
-    model = trainer.fit(xtr, ytr, c_value=args.svm_c)
+        leaf_size=256, max_it=10, mesh=mesh)
+    model = engine.fit(xtr, ytr, c_value=args.svm_c)
     t_train = time.time() - t0
     acc = float(jnp.mean(model.predict(jnp.asarray(xte)) == jnp.asarray(yte)))
-    rep = trainer.report
+    rep = engine.report
     print(f"trained {args.svm_classes}-class model on {args.svm_train} pts "
           f"in {t_train:.1f}s (compress {rep.compression_s:.1f}s / factor "
           f"{rep.factorization_s:.2f}s / batched ADMM {rep.admm_s:.2f}s), "
@@ -137,6 +144,9 @@ def main() -> None:
     ap.add_argument("--svm-train", type=int, default=8192)
     ap.add_argument("--svm-h", type=float, default=1.5)
     ap.add_argument("--svm-c", type=float, default=1.0)
+    ap.add_argument("--svm-mesh", action="store_true",
+                    help="mesh-parallel HSS build/serve over all local "
+                         "devices (core.engine.HSSSVMEngine)")
     args = ap.parse_args()
 
     if args.task == "svm":

@@ -1,12 +1,20 @@
-"""Training driver.
+"""Training driver: LM substrate runs and mesh-parallel SVM training.
 
   PYTHONPATH=src python -m repro.launch.train --arch gemma2-9b --preset tiny \
       --steps 50 --ckpt-dir /tmp/run1
 
-Presets: tiny (CPU-runnable reduced config), full (the assigned config —
+  PYTHONPATH=src python -m repro.launch.train --task svm \
+      --svm-train 16384 --svm-c-grid 0.1,1,10
+
+LM presets: tiny (CPU-runnable reduced config), full (the assigned config —
 requires the production mesh).  Fault tolerance: checkpoints every
 --ckpt-every steps (async), resumes from the latest checkpoint, runs under a
 StepGuard deadline, and supports failure-injection drills (--fail-at).
+
+The SVM task drives repro.core.engine.HSSSVMEngine: when more than one
+device is visible the whole pipeline (compression, factorization, ADMM
+C-grid, bias, holdout scoring) runs node/sample-sharded over a mesh of all
+local devices.
 """
 from __future__ import annotations
 
@@ -17,18 +25,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt.checkpoint import CheckpointManager
-from repro.configs.registry import get_config
-from repro.data.tokens import batch_for_config
-from repro.dist import fault
-from repro.models.transformer import Model
-from repro.train import optim
-from repro.train.step import make_train_step
+
+def train_svm(args) -> None:
+    from repro.core.compression import CompressionParams
+    from repro.core.engine import HSSSVMEngine
+    from repro.core.kernelfn import KernelSpec
+    from repro.data import synthetic
+
+    xtr, ytr, xte, yte = synthetic.train_test(
+        args.svm_dataset, args.svm_train, args.svm_test, seed=0)
+    mesh = None
+    if jax.device_count() > 1 and not args.svm_local:
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        print(f"mesh-parallel build over {jax.device_count()} devices")
+    engine = HSSSVMEngine(
+        spec=KernelSpec(h=args.svm_h),
+        comp=CompressionParams(rank=args.svm_rank, n_near=48, n_far=64),
+        leaf_size=args.svm_leaf, max_it=10, mesh=mesh)
+    t0 = time.time()
+    rep = engine.prepare(xtr, ytr)
+    print(f"prepare: compress {rep.compression_s:.1f}s, factorize "
+          f"{rep.factorization_s:.2f}s, HSS {rep.memory_mb:.1f} MB, "
+          f"beta {rep.beta:g}")
+    c_grid = [float(c) for c in args.svm_c_grid.split(",")]
+    yte_j = jnp.asarray(yte)
+    for c, model in zip(c_grid, engine.train_grid(c_grid)):
+        acc = float(jnp.mean(model.predict(jnp.asarray(xte)) == yte_j))
+        print(f"C={c:g}: holdout acc {acc:.4f}")
+    print(f"done in {time.time() - t0:.1f}s "
+          f"(ADMM total {engine.report.admm_s:.2f}s across the C grid)")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--task", default="lm", choices=["lm", "svm"])
+    ap.add_argument("--arch", default=None, help="LM arch (required for lm)")
     ap.add_argument("--preset", default="tiny", choices=["tiny", "small",
                                                          "full"])
     ap.add_argument("--steps", type=int, default=20)
@@ -40,7 +71,30 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--fail-at", type=int, action="append", default=[])
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--svm-dataset", default="blobs")
+    ap.add_argument("--svm-train", type=int, default=16384)
+    ap.add_argument("--svm-test", type=int, default=2048)
+    ap.add_argument("--svm-h", type=float, default=1.0)
+    ap.add_argument("--svm-c-grid", default="0.1,1,10")
+    ap.add_argument("--svm-rank", type=int, default=32)
+    ap.add_argument("--svm-leaf", type=int, default=256)
+    ap.add_argument("--svm-local", action="store_true",
+                    help="force the single-device engine path")
     args = ap.parse_args()
+
+    if args.task == "svm":
+        train_svm(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required for --task lm")
+
+    from repro.ckpt.checkpoint import CheckpointManager
+    from repro.configs.registry import get_config
+    from repro.data.tokens import batch_for_config
+    from repro.dist import fault
+    from repro.models.transformer import Model
+    from repro.train import optim
+    from repro.train.step import make_train_step
 
     cfg = get_config(args.arch)
     if args.preset == "tiny":

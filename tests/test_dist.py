@@ -152,7 +152,7 @@ def test_distributed_svm_solve_matches_local():
         mesh = jax.make_mesh((8,), ("data",))
         fac_sh = fac_shardings(jax.eval_shape(lambda: fac), mesh)
         fac_d = jax.device_put(fac, fac_sh)
-        b_d = jax.device_put(b, vec_sharding(n, mesh))
+        b_d = jax.device_put(b, vec_sharding(mesh))
         with mesh:
             out = np.asarray(jax.jit(lambda f, v: f.solve(v))(fac_d, b_d))
         np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)

@@ -119,3 +119,24 @@ def test_woodbury_identity_lemma():
         np.asarray(a_inv_lemma), np.asarray(jnp.linalg.inv(a_full)),
         rtol=5e-3, atol=5e-4,
     )
+
+
+@pytest.mark.parametrize("beta", [10.0, 100.0])
+def test_bf16_storage_solve_accuracy(beta):
+    """store_dtype='bfloat16' must stay within bf16 rounding of the f32
+    solve: every per-level einsum pins preferred_element_type=float32, so
+    the only error source is factor STORAGE rounding (~1e-2), never bf16
+    accumulation (which would be ~1e-1 at these depths).  Regression for
+    the mixed-precision accumulation contract."""
+    hss = _hss(n=1024, leaf=64, rank=24)
+    fac32 = factorization.factorize(hss, beta)
+    fac16 = factorization.factorize(hss, beta, store_dtype="bfloat16")
+    assert fac16.e_leaf.dtype == jnp.bfloat16
+    assert fac16.root_lu.dtype == jnp.float32    # root stays f32
+    b = jnp.asarray(
+        np.random.default_rng(0).normal(size=(hss.n, 3)), jnp.float32)
+    x32 = fac32.solve_mat(b)
+    x16 = fac16.solve_mat(b)
+    assert x16.dtype == jnp.float32              # f32 accumulation contract
+    rel = float(jnp.linalg.norm(x16 - x32) / jnp.linalg.norm(x32))
+    assert rel < 1e-2, rel                       # measured ~3.3e-3
