@@ -2,12 +2,22 @@
 
 Columns mirror the paper: Compression [s] | Factorization [s] | Memory [MB] |
 ADMM Time [s] (per C, MaxIt=10) | Accuracy [%].  Two presets mirror the
-paper's STRUMPACK settings: "crude" (Table 4: hss_max_rank=200, 64
-neighbours — here rank 32) and "accurate" (Table 5: rank 2000, 512
-neighbours — here rank 64).  The paper's headline observations to check:
+paper's STRUMPACK settings: "crude" (Table 4: rel_tol=1e-2, hss_max_rank=200,
+64 neighbours — here rtol 1e-2, cap 32) and "accurate" (Table 5: rel_tol=
+1e-4, rank 2000, 512 neighbours — here rtol 1e-4, cap 64).  The paper's
+headline observations to check:
   (1) crude ≈ accurate in accuracy (approximation tolerance of SVMs),
   (2) ADMM time << compression time (the C-grid amortization),
   (3) memory scales O(N r), not O(N^2).
+
+Every record includes the per-level HSS rank caps BEFORE and AFTER the
+shrink-to-fit pass (pre == post when the tolerance saturates the cap — the
+honest outcome on the high-dimensional table45 cases), the Σ n_k·r_k stored
+rank sums, and the exact kernel-evaluation count of the build, so rank
+adaptivity is observable in the perf trajectory.  The ``svm_adaptive/*``
+cases isolate the tolerance-driven win on smooth (2-feature) kernels: same
+holdout accuracy, several-fold smaller stored rank sum, faster
+factorization.
 
 All cases drive repro.core.engine.HSSSVMEngine — the same orchestration the
 launch/ and examples/ layers use — and every case additionally records a
@@ -16,6 +26,8 @@ BENCH_svm.json`` (or the ci/run_tests.sh --bench smoke tier) writes them:
 build/factor/ADMM wall times, holdout accuracy, HSS memory, and the peak
 per-device bytes of the resident HSS + factorization arrays (the number the
 mesh-parallel build exists to keep flat as devices are added).
+ci/check_bench.py compares a fresh run's accuracies against the committed
+BENCH_svm.json and fails on silent drift.
 """
 from __future__ import annotations
 
@@ -35,8 +47,8 @@ from repro.core.svm import HSSSVMTrainer
 from repro.data import synthetic
 
 PRESETS = {
-    "crude": CompressionParams(rank=32, n_near=32, n_far=32),
-    "accurate": CompressionParams(rank=64, n_near=64, n_far=128),
+    "crude": CompressionParams.crude(),        # rtol 1e-2, cap 32
+    "accurate": CompressionParams.accurate(),  # rtol 1e-4, cap 64
 }
 
 DATASETS = [
@@ -69,6 +81,17 @@ def _record(case: str, **kw) -> dict:
     return rec
 
 
+def _rank_fields(rep) -> dict:
+    """FitReport rank-adaptivity fields for a JSON record."""
+    return dict(
+        ranks_pre=list(rep.ranks_pre or ()),
+        ranks_post=list(rep.ranks_post or ()),
+        rank_sum_pre=rep.rank_sum_pre,
+        rank_sum_post=rep.rank_sum_post,
+        kernel_evals=rep.kernel_evals,
+    )
+
+
 def run(csv_rows: list, scale: float = 1.0) -> None:
     for name, kw, n_train, n_test, h in DATASETS:
         n_train, n_test = int(n_train * scale), max(int(n_test * scale), 256)
@@ -87,6 +110,7 @@ def run(csv_rows: list, scale: float = 1.0) -> None:
                 factorization_s=rep.factorization_s,
                 admm_s=rep.admm_s, memory_mb=rep.memory_mb,
                 peak_device_bytes=peak_device_bytes(engine.hss, engine.fac),
+                **_rank_fields(rep),
             )
             csv_rows.append((
                 f"svm_table45/{name}/{preset_name}",
@@ -131,6 +155,7 @@ def run_sharded(csv_rows: list, scale: float = 1.0) -> None:
             factorization_s=rep.factorization_s,
             admm_s=rep.admm_s, memory_mb=rep.memory_mb,
             peak_device_bytes=peak,
+            **_rank_fields(rep),
         )
         csv_rows.append((
             f"svm_sharded_build/{label}",
@@ -146,6 +171,73 @@ def run_sharded(csv_rows: list, scale: float = 1.0) -> None:
             0.0,
             f"acc_local={accs['local']:.4f};acc_mesh={accs['mesh']:.4f};"
             f"delta={abs(accs['local'] - accs['mesh']):.4f}",
+        ))
+
+
+ADAPTIVE_CASES = [
+    # (dataset, kwargs, n_train, n_test, h): smooth 2-feature kernels where
+    # the numerical rank sits far below the cap — the regime the paper's
+    # rel_tol knob exists for.
+    ("circles", dict(n_features=2, gap=0.8), 16384, 2048, 1.5),
+    ("blobs", dict(n_features=2, sep=2.5), 16384, 2048, 2.0),
+]
+
+
+def run_adaptive(csv_rows: list, scale: float = 1.0) -> None:
+    """Tolerance-driven adaptive rank vs the fixed-rank baseline.
+
+    Same cap, same proxies, same data: the adaptive build must match the
+    fixed build's holdout accuracy while the stored rank sum (Σ n_k·r_k) and
+    the factorization time drop — rank is measured per node, not paid at the
+    worst case.  Runs each path twice and reports steady-state times so the
+    comparison is not a compile-time artifact.
+    """
+    for name, kw, n_train, n_test, h in ADAPTIVE_CASES:
+        n_train_s = int(n_train * scale)
+        n_test_s = max(int(n_test * scale), 256)
+        xtr, ytr, xte, yte = synthetic.train_test(
+            name, n_train_s, n_test_s, seed=0, **kw)
+        results = {}
+        for label, comp in [
+            ("fixed", CompressionParams(rank=64, n_near=64, n_far=128)),
+            ("adaptive", CompressionParams(rank=64, n_near=64, n_far=128,
+                                           rtol=1e-4)),
+        ]:
+            rep = None
+            for _ in range(2):      # second run = steady state
+                engine = HSSSVMEngine(
+                    spec=KernelSpec(h=h), comp=comp, leaf_size=256, max_it=10)
+                rep = engine.prepare(xtr, ytr)
+                model, _ = engine.train(1.0)
+                acc = float(jnp.mean(model.predict(jnp.asarray(xte)) == yte))
+            results[label] = (rep, acc)
+            _record(
+                f"svm_adaptive/{name}/{label}",
+                n_train=n_train_s, accuracy=acc,
+                compression_s=rep.compression_s,
+                factorization_s=rep.factorization_s,
+                admm_s=rep.admm_s, memory_mb=rep.memory_mb,
+                peak_device_bytes=peak_device_bytes(engine.hss, engine.fac),
+                **_rank_fields(rep),
+            )
+            csv_rows.append((
+                f"svm_adaptive/{name}/{label}",
+                rep.factorization_s * 1e6,
+                f"acc={acc:.4f};rank_sum={rep.rank_sum_post};"
+                f"ranks_post={list(rep.ranks_post or ())};"
+                f"compress_s={rep.compression_s:.2f};"
+                f"factor_s={rep.factorization_s:.2f};"
+                f"mem_mb={rep.memory_mb:.2f}",
+            ))
+        (rep_f, acc_f), (rep_a, acc_a) = results["fixed"], results["adaptive"]
+        csv_rows.append((
+            f"svm_adaptive/{name}/summary",
+            0.0,
+            f"acc_delta={abs(acc_f - acc_a):.4f};"
+            f"rank_sum={rep_f.rank_sum_post}->{rep_a.rank_sum_post};"
+            f"factor_s={rep_f.factorization_s:.2f}->"
+            f"{rep_a.factorization_s:.2f};"
+            f"mem_mb={rep_f.memory_mb:.2f}->{rep_a.memory_mb:.2f}",
         ))
 
 
@@ -239,6 +331,7 @@ if __name__ == "__main__":
     scale = 0.125 if args.smoke else 1.0
     rows: list = []
     run(rows, scale=scale)
+    run_adaptive(rows, scale=scale)
     run_sharded(rows, scale=scale)
     if not (args.smoke or args.skip_multiclass):
         run_multiclass(rows)

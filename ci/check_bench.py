@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Benchmark accuracy regression guard for the ci/run_tests.sh --bench tier.
+
+Compares a fresh BENCH_svm.json against the committed reference and FAILS
+when any case's holdout accuracy drops by more than the tolerance — silent
+accuracy drift (a looser compression, a broken mask, a bad warm start) then
+breaks the bench tier instead of quietly shipping in the perf trajectory.
+
+Only cases present in BOTH files are compared, so adding or retiring bench
+cases never trips the guard; accuracy improvements pass.  Non-accuracy
+fields (timings, ranks, memory) are machine noise across hosts and are
+deliberately not guarded.
+
+Usage: python ci/check_bench.py REF.json NEW.json [--tol 0.02]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_cases(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["case"]: r for r in payload.get("results", []) if "case" in r}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("ref", help="committed reference BENCH_svm.json")
+    ap.add_argument("new", help="freshly generated BENCH_svm.json")
+    ap.add_argument("--tol", type=float, default=0.02,
+                    help="max tolerated accuracy DROP per case (default 0.02)")
+    args = ap.parse_args()
+
+    ref, new = load_cases(args.ref), load_cases(args.new)
+    shared = [c for c in new if c in ref
+              and "accuracy" in ref[c] and "accuracy" in new[c]]
+    # Case names are scale-independent but accuracies are not: comparing a
+    # full-scale reference against a --smoke run (or vice versa) would trip
+    # the guard on the scale difference, not on real drift.
+    mismatched = [c for c in shared
+                  if ref[c].get("n_train") != new[c].get("n_train")]
+    for c in mismatched:
+        print(f"check_bench: skip {c}: n_train {ref[c].get('n_train')} != "
+              f"{new[c].get('n_train')} (different bench scale)")
+    shared = [c for c in shared if c not in mismatched]
+    if not shared:
+        print("check_bench: no comparable cases between ref and new — "
+              "nothing to guard")
+        return 0
+
+    failures = []
+    for case in sorted(shared):
+        a_ref, a_new = ref[case]["accuracy"], new[case]["accuracy"]
+        drift = a_ref - a_new
+        status = "FAIL" if drift > args.tol else "ok"
+        print(f"check_bench: {status:4s} {case}: accuracy "
+              f"{a_ref:.4f} -> {a_new:.4f} (drift {drift:+.4f})")
+        if drift > args.tol:
+            failures.append(case)
+    if failures:
+        print(f"check_bench: {len(failures)}/{len(shared)} cases dropped "
+              f"more than {args.tol} accuracy: {', '.join(failures)}")
+        return 1
+    print(f"check_bench: {len(shared)} cases within {args.tol} of reference")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

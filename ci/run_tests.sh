@@ -7,7 +7,10 @@
 # Pass --bench for the benchmark smoke tier instead of pytest: runs the
 # JSON-emitting SVM benchmark (benchmarks/bench_svm.py --smoke) at toy
 # size, including the sharded-build case on the 8 emulated devices, and
-# leaves BENCH_svm.json in the repo root for the perf trajectory.
+# leaves BENCH_svm.json in the repo root for the perf trajectory.  The
+# fresh run is then compared against the committed BENCH_svm.json
+# (ci/check_bench.py): a per-case accuracy drop beyond the tolerance
+# fails the tier, so silent accuracy drift cannot ship.
 # Always prints the 10 slowest tests so tier creep stays visible.
 #
 # The distribution-layer tests (tests/test_dist.py, tests/test_fault.py,
@@ -35,8 +38,20 @@ for arg in "$@"; do
 done
 
 if [[ "$bench" == 1 ]]; then
-  exec python benchmarks/bench_svm.py --smoke --json BENCH_svm.json \
+  ref="$(mktemp)"
+  trap 'rm -f "$ref"' EXIT   # cleanup even when the guard fails under set -e
+  have_ref=0
+  # Committed reference from git — the working-tree file is about to be
+  # overwritten by the fresh run.
+  if git show HEAD:BENCH_svm.json > "$ref" 2>/dev/null; then have_ref=1; fi
+  python benchmarks/bench_svm.py --smoke --json BENCH_svm.json \
     ${pass_args[@]+"${pass_args[@]}"}
+  if [[ "$have_ref" == 1 ]]; then
+    python ci/check_bench.py "$ref" BENCH_svm.json
+  else
+    echo "check_bench: no committed BENCH_svm.json at HEAD — guard skipped"
+  fi
+  exit 0
 fi
 
 # ${arr[@]+...} idiom: empty-array expansion is an unbound-variable error

@@ -3,12 +3,13 @@
 from repro.core.admm import ADMMState, admm_svm, admm_svm_batched, paper_beta
 from repro.core.compression import (
     CompressionParams, compress, compress_sharded, compression_error,
+    kernel_eval_count,
 )
 from repro.core.engine import EngineModel, HSSSVMEngine
 from repro.core.factorization import (
     HSSFactorization, factorize, factorize_sharded, hss_solve, hss_solve_mat,
 )
-from repro.core.hss import HSSMatrix
+from repro.core.hss import HSSMatrix, shrink_to_fit
 from repro.core.kernelfn import KernelSpec, kernel_block
 from repro.core.multiclass import (
     MulticlassHSSSVMTrainer, MulticlassSVMModel, grid_search_multiclass,
@@ -19,10 +20,11 @@ from repro.core.tree import ClusterTree, build_tree, pad_dataset
 __all__ = [
     "ADMMState", "admm_svm", "admm_svm_batched", "paper_beta",
     "CompressionParams", "compress", "compress_sharded", "compression_error",
+    "kernel_eval_count",
     "EngineModel", "HSSSVMEngine",
     "HSSFactorization", "factorize", "factorize_sharded",
     "hss_solve", "hss_solve_mat",
-    "HSSMatrix", "KernelSpec", "kernel_block",
+    "HSSMatrix", "shrink_to_fit", "KernelSpec", "kernel_block",
     "HSSSVMTrainer", "SVMModel", "grid_search",
     "MulticlassHSSSVMTrainer", "MulticlassSVMModel", "grid_search_multiclass",
     "ClusterTree", "build_tree", "pad_dataset",

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import idqr
-from repro.core.hss import HSSMatrix
+from repro.core.hss import HSSMatrix, rank_mask
 from repro.core.kernelfn import KernelSpec, kernel_block
 from repro.core.tree import ClusterTree
 
@@ -38,7 +38,17 @@ Array = jax.Array
 class CompressionParams:
     """Accuracy knobs, analogous to the paper's STRUMPACK parameters.
 
-    rank      ~ hss_max_rank  (Table 4: 200, Table 5: 2000 — here per level)
+    rtol      ~ rel_tol        (Table 4 "crude": 1e-2, Table 5 "accurate":
+                1e-4) — the paper-facing accuracy knob.  None = legacy
+                fixed-rank mode: every node stores the full ``rank`` columns.
+                A float switches on the ADAPTIVE build: each node's numerical
+                rank is detected from the pivoted-QR diagonal decay against
+                rtol, truncated columns are exact zeros, and
+                ``hss.shrink_to_fit`` can slice each level to its observed
+                max rank.
+    rank      ~ hss_max_rank   (Table 4: 200, Table 5: 2000 — here per
+                level).  With rtol set this is only the CAP on the detected
+                rank (STRUMPACK semantics); without it, the rank itself.
     n_near    ~ hss_approximate_neighbors (Table 4: 64, Table 5: 512)
     n_far     — far-field proxy sample size
     """
@@ -47,10 +57,61 @@ class CompressionParams:
     n_near: int = 32
     n_far: int = 32
     seed: int = 0
+    rtol: float | None = None
 
     @property
     def n_proxy(self) -> int:
         return self.n_near + self.n_far
+
+    @classmethod
+    def crude(cls, **kw) -> "CompressionParams":
+        """Paper Table 4 regime: loose tolerance, small cap/neighbourhoods."""
+        return cls(**{**dict(rank=32, n_near=32, n_far=32, rtol=1e-2), **kw})
+
+    @classmethod
+    def accurate(cls, **kw) -> "CompressionParams":
+        """Paper Table 5 regime: tight tolerance, larger cap/neighbourhoods."""
+        return cls(**{**dict(rank=64, n_near=64, n_far=128, rtol=1e-4), **kw})
+
+
+def kernel_eval_count(tree: ClusterTree, params: CompressionParams) -> int:
+    """Exact number of kernel entries ``compress`` evaluates for this tree.
+
+    The partially matrix-free build touches O(N · n_proxy) entries instead of
+    N² — this counts them exactly (leaf diagonal blocks + leaf sampled
+    blocks + per-level candidate×proxy blocks + B couplings), for the bench's
+    perf trajectory.  Static per (tree, params): the adaptive build masks
+    entries but the sampled block SHAPES are the rank cap, so adaptivity
+    shows up in stored ranks and factor/solve cost, not here.
+    """
+    m, K = tree.leaf_size, tree.levels
+    n_leaf = 2 ** K
+    r0 = min(params.rank, m)
+    total = n_leaf * (m * m + m * params.n_proxy)
+    r_prev = r0
+    for k in range(1, K + 1):
+        n_k = 2 ** (K - k)
+        total += n_k * r_prev * r_prev                  # sibling couplings B
+        if k == K:
+            break
+        total += n_k * (2 * r_prev) * (2 * r_prev + params.n_far)
+        r_prev = min(params.rank, 2 * r_prev)
+    return total
+
+
+def _cand_mask(ranks: Array, rp: int, dtype) -> Array:
+    """(2·n,) child rank vector -> (n, 2·rp) candidate-slot liveness.
+
+    One row per parent: the two children's ``hss.rank_mask`` rows side by
+    side — shared by the local and sharded builds so the masking rule cannot
+    drift between them.
+    """
+    return rank_mask(ranks, rp, dtype).reshape(-1, 2 * rp)
+
+
+def _mask_b(b: Array, cm: Array, rp: int) -> Array:
+    """Zero B rows/columns of dead child skeletons (exact structural zeros)."""
+    return b * cm[:, :rp, None] * cm[:, rp:][:, None, :]
 
 
 def _complement_sample(
@@ -153,6 +214,7 @@ def compress(
     if x_perm.shape[0] != n:
         raise ValueError(f"x has {x_perm.shape[0]} rows, tree expects {n}")
     r0 = min(params.rank, m)
+    adaptive, rtol = params.rtol is not None, params.rtol
 
     far_idx = [jnp.asarray(a) for a in _host_proxy_indices(tree, params)]
     x_host = np.asarray(jax.device_get(x_perm))
@@ -166,26 +228,41 @@ def compress(
     def leaf_basis(xa: Array, prox_idx: Array, leaf_start: Array):
         xp = jnp.take(x_perm, prox_idx, axis=0)
         a = kernel_block(spec, xa, xp)            # (m, n_proxy)
-        piv, p_mat = idqr.row_interp_decomp(a, r0)
-        return p_mat, leaf_start + piv.astype(jnp.int32)
+        if adaptive:
+            piv, p_mat, rk = idqr.row_interp_decomp_ranked(a, r0, rtol)
+        else:
+            piv, p_mat = idqr.row_interp_decomp(a, r0)
+            rk = jnp.int32(r0)
+        return p_mat, leaf_start + piv.astype(jnp.int32), rk
 
     leaf_starts = jnp.arange(n_leaf, dtype=jnp.int32) * m
     prox0 = jnp.concatenate([leaf_near, far_idx[0]], axis=1)
-    u_leaf, skel_leaf = jax.vmap(leaf_basis)(x_leaves, prox0, leaf_starts)
+    u_leaf, skel_leaf, leaf_ranks = jax.vmap(leaf_basis)(
+        x_leaves, prox0, leaf_starts)
 
     # ---------------- internal levels ---------------- #
     transfers: list[Array] = []
     skels: list[Array] = []
     b_mats: list[Array] = []
+    level_ranks: list[Array] = []
     skel_prev = skel_leaf                     # (n_{k-1}, r_{k-1})
+    rank_prev = leaf_ranks                    # (n_{k-1},) numerical ranks
     r_prev = r0
     for k in range(1, K + 1):
         n_k = 2 ** (K - k)
         cand = skel_prev.reshape(n_k, 2 * r_prev)      # children skeleton ids
-        # B couplings: K(skel_c1, skel_c2) — pure kernel evals.
+        # Liveness of each candidate slot under the children's detected ranks
+        # (all-ones in fixed-rank mode).
+        cmask = _cand_mask(rank_prev, r_prev, x_perm.dtype)
+        # B couplings: K(skel_c1, skel_c2) — pure kernel evals.  Dead
+        # skeleton rows/columns are masked to exact zeros so the truncation
+        # is structural (factorization decouples them; shrink slices them).
         xa = jnp.take(x_perm, cand[:, :r_prev], axis=0)
         xb = jnp.take(x_perm, cand[:, r_prev:], axis=0)
-        b_mats.append(jax.vmap(lambda a, b: kernel_block(spec, a, b))(xa, xb))
+        b_k = jax.vmap(lambda a, b: kernel_block(spec, a, b))(xa, xb)
+        if adaptive:
+            b_k = _mask_b(b_k, cmask, r_prev)
+        b_mats.append(b_k)
         if k == K:
             break
         r_k = min(params.rank, 2 * r_prev)
@@ -193,17 +270,26 @@ def compress(
         sib = cand.reshape(n_k // 2, 2, 2 * r_prev)[:, ::-1, :].reshape(n_k, 2 * r_prev)
         prox = jnp.concatenate([sib, far_idx[k]], axis=1)
 
-        def node_basis(cand_i: Array, prox_i: Array):
+        def node_basis(cand_i: Array, prox_i: Array, cmask_i: Array):
             xc = jnp.take(x_perm, cand_i, axis=0)
             xp = jnp.take(x_perm, prox_i, axis=0)
             a = kernel_block(spec, xc, xp)             # (2 r_prev, n_prox)
-            piv, p_mat = idqr.row_interp_decomp(a, r_k)
-            return p_mat, jnp.take(cand_i, piv)
+            if adaptive:
+                # Zero dead candidate rows: skeleton propagation only ever
+                # forwards LIVE child skeleton points (dead rows get zero
+                # interpolation weights and sort behind every live pivot).
+                a = a * cmask_i[:, None]
+                piv, p_mat, rk = idqr.row_interp_decomp_ranked(a, r_k, rtol)
+            else:
+                piv, p_mat = idqr.row_interp_decomp(a, r_k)
+                rk = jnp.int32(r_k)
+            return p_mat, jnp.take(cand_i, piv), rk
 
-        t_k, skel_k = jax.vmap(node_basis)(cand, prox)
+        t_k, skel_k, rank_k = jax.vmap(node_basis)(cand, prox, cmask)
         transfers.append(t_k)
         skels.append(skel_k)
-        skel_prev, r_prev = skel_k, r_k
+        level_ranks.append(rank_k)
+        skel_prev, rank_prev, r_prev = skel_k, rank_k, r_k
 
     return HSSMatrix(
         x=x_perm,
@@ -215,6 +301,8 @@ def compress(
         b_mats=tuple(b_mats),
         levels=K,
         leaf_size=m,
+        leaf_ranks=leaf_ranks if adaptive else None,
+        level_ranks=tuple(level_ranks) if adaptive else (),
     )
 
 
@@ -276,6 +364,7 @@ def compress_sharded(
         return compress(jnp.asarray(x_host), tree, spec, params)
 
     r0 = min(params.rank, m)
+    adaptive, rtol = params.rtol is not None, params.rtol
     p_nodes = PartitionSpec(nodes)
     sh_nodes = NamedSharding(mesh, p_nodes)
     sh_repl = NamedSharding(mesh, PartitionSpec())
@@ -295,24 +384,30 @@ def compress_sharded(
 
         def one(xa, xpi, s):
             a = kernel_block(spec, xa, xpi)            # (m, n_proxy)
-            piv, p_mat = idqr.row_interp_decomp(a, r0)
+            if adaptive:
+                piv, p_mat, rk = idqr.row_interp_decomp_ranked(a, r0, rtol)
+            else:
+                piv, p_mat = idqr.row_interp_decomp(a, r0)
+                rk = jnp.int32(r0)
             piv = piv.astype(jnp.int32)
-            return p_mat, s + piv, jnp.take(xa, piv, axis=0)
+            return p_mat, s + piv, jnp.take(xa, piv, axis=0), rk
 
-        u, skel, spts = jax.vmap(one)(xl, xp, starts)
-        return d, u, skel, spts
+        u, skel, spts, rks = jax.vmap(one)(xl, xp, starts)
+        return d, u, skel, spts, rks
 
     leaf_fn = jax.jit(shard_map(
         _leaf_stage, mesh,
         in_specs=(p_nodes, p_nodes, p_nodes),
-        out_specs=(p_nodes, p_nodes, p_nodes, p_nodes)))
-    d_leaf, u_leaf, skel_leaf, spts = leaf_fn(x_leaves, x_prox0, leaf_starts)
-    sids = skel_leaf
+        out_specs=(p_nodes,) * 5))
+    d_leaf, u_leaf, skel_leaf, spts, leaf_ranks = leaf_fn(
+        x_leaves, x_prox0, leaf_starts)
+    sids, sranks = skel_leaf, leaf_ranks
 
     # ---------------- internal levels ---------------- #
     transfers: list[Array] = []
     skels: list[Array] = []
     b_mats: list[Array] = []
+    level_ranks: list[Array] = []
     r_prev = r0
     sharded = True
     for k in range(1, K + 1):
@@ -322,10 +417,12 @@ def compress_sharded(
         want = (sharded and n_k % ndev == 0
                 and (k == K or (n_k // ndev) % 2 == 0))
         if sharded and not want:
-            # Degradation point: one all-gather of the skeleton points/ids
-            # (O(r * n_k) — the only cross-device traffic of the upper tree).
+            # Degradation point: one all-gather of the skeleton points/ids/
+            # ranks (O(r * n_k) — the only cross-device traffic of the
+            # upper tree).
             spts = jax.device_put(spts, sh_repl)
             sids = jax.device_put(sids, sh_repl)
+            sranks = jax.device_put(sranks, sh_repl)
             sharded = False
         r_k = min(params.rank, 2 * r_prev)
 
@@ -333,70 +430,95 @@ def compress_sharded(
             loc = n_k // ndev
             rp, rk = r_prev, r_k
             if k == K:
-                def _b_only(sp):
+                def _b_only(sp, sr):
                     cp = sp.reshape(loc, 2 * rp, sp.shape[-1])
-                    return jax.vmap(
+                    b = jax.vmap(
                         lambda c: kernel_block(spec, c[:rp], c[rp:]))(cp)
+                    if adaptive:
+                        b = _mask_b(b, _cand_mask(sr, rp, b.dtype), rp)
+                    return b
 
                 b_fn = jax.jit(shard_map(
-                    _b_only, mesh, in_specs=(p_nodes,), out_specs=p_nodes))
-                b_mats.append(b_fn(spts))
+                    _b_only, mesh, in_specs=(p_nodes, p_nodes),
+                    out_specs=p_nodes))
+                b_mats.append(b_fn(spts, sranks))
                 break
 
             far_pts = jax.device_put(x_host[far_idx[k]], sh_nodes)
 
-            def _level(sp, si, fp):
+            def _level(sp, si, sr, fp):
                 f = sp.shape[-1]
                 cp = sp.reshape(loc, 2 * rp, f)
                 ci = si.reshape(loc, 2 * rp)
+                cm = _cand_mask(sr, rp, sp.dtype)
                 b = jax.vmap(
                     lambda c: kernel_block(spec, c[:rp], c[rp:]))(cp)
+                if adaptive:
+                    b = _mask_b(b, cm, rp)
                 sib = cp.reshape(loc // 2, 2, 2 * rp, f)[:, ::-1]
                 sib = sib.reshape(loc, 2 * rp, f)
 
-                def node_basis(cp_i, ci_i, sp_i, fp_i):
+                def node_basis(cp_i, ci_i, cm_i, sp_i, fp_i):
                     xp_ = jnp.concatenate([sp_i, fp_i], axis=0)
                     a = kernel_block(spec, cp_i, xp_)
-                    piv, p_mat = idqr.row_interp_decomp(a, rk)
+                    if adaptive:
+                        a = a * cm_i[:, None]
+                        piv, p_mat, rk_i = idqr.row_interp_decomp_ranked(
+                            a, rk, rtol)
+                    else:
+                        piv, p_mat = idqr.row_interp_decomp(a, rk)
+                        rk_i = jnp.int32(rk)
                     return (p_mat, jnp.take(ci_i, piv),
-                            jnp.take(cp_i, piv, axis=0))
+                            jnp.take(cp_i, piv, axis=0), rk_i)
 
-                t, ids, pts = jax.vmap(node_basis)(cp, ci, sib, fp)
-                return b, t, ids, pts
+                t, ids, pts, rks = jax.vmap(node_basis)(cp, ci, cm, sib, fp)
+                return b, t, ids, pts, rks
 
             lvl_fn = jax.jit(shard_map(
                 _level, mesh,
-                in_specs=(p_nodes, p_nodes, p_nodes),
-                out_specs=(p_nodes,) * 4))
-            b_k, t_k, sids, spts = lvl_fn(spts, sids, far_pts)
+                in_specs=(p_nodes,) * 4,
+                out_specs=(p_nodes,) * 5))
+            b_k, t_k, sids, spts, sranks = lvl_fn(spts, sids, sranks, far_pts)
             b_mats.append(b_k)
             transfers.append(t_k)
             skels.append(sids)
+            level_ranks.append(sranks)
         else:
             # Replicated upper tree: same math, every device computes it.
             f = spts.shape[-1]
             cand_pts = spts.reshape(n_k, 2 * r_prev, f)
             cand_ids = sids.reshape(n_k, 2 * r_prev)
-            b_mats.append(jax.vmap(
+            cmask = _cand_mask(sranks, r_prev, spts.dtype)
+            b_k = jax.vmap(
                 lambda c: kernel_block(spec, c[:r_prev], c[r_prev:])
-            )(cand_pts))
+            )(cand_pts)
+            if adaptive:
+                b_k = _mask_b(b_k, cmask, r_prev)
+            b_mats.append(b_k)
             if k == K:
                 break
             sib = cand_pts.reshape(n_k // 2, 2, 2 * r_prev, f)[:, ::-1]
             sib = sib.reshape(n_k, 2 * r_prev, f)
             far_pts = jax.device_put(x_host[far_idx[k]], sh_repl)
 
-            def node_basis(cp_i, ci_i, sp_i, fp_i):
+            def node_basis(cp_i, ci_i, cm_i, sp_i, fp_i):
                 xp_ = jnp.concatenate([sp_i, fp_i], axis=0)
                 a = kernel_block(spec, cp_i, xp_)
-                piv, p_mat = idqr.row_interp_decomp(a, r_k)
+                if adaptive:
+                    a = a * cm_i[:, None]
+                    piv, p_mat, rk_i = idqr.row_interp_decomp_ranked(
+                        a, r_k, rtol)
+                else:
+                    piv, p_mat = idqr.row_interp_decomp(a, r_k)
+                    rk_i = jnp.int32(r_k)
                 return (p_mat, jnp.take(ci_i, piv),
-                        jnp.take(cp_i, piv, axis=0))
+                        jnp.take(cp_i, piv, axis=0), rk_i)
 
-            t_k, sids, spts = jax.vmap(node_basis)(
-                cand_pts, cand_ids, sib, far_pts)
+            t_k, sids, spts, sranks = jax.vmap(node_basis)(
+                cand_pts, cand_ids, cmask, sib, far_pts)
             transfers.append(t_k)
             skels.append(sids)
+            level_ranks.append(sranks)
         r_prev = r_k
 
     return HSSMatrix(
@@ -409,6 +531,8 @@ def compress_sharded(
         b_mats=tuple(b_mats),
         levels=K,
         leaf_size=m,
+        leaf_ranks=leaf_ranks if adaptive else None,
+        level_ranks=tuple(level_ranks) if adaptive else (),
     )
 
 

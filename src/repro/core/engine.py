@@ -35,7 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import admm as admm_mod
 from repro.core import compression, factorization, tree as tree_mod
-from repro.core.hss import HSSMatrix
+from repro.core.hss import HSSMatrix, shrink_report
 from repro.core.kernelfn import KernelSpec, kernel_matvec_streamed
 from repro.core.multiclass import ovo_problems, ovo_vote, ovr_problems
 from repro.core.svm import FitReport, compute_bias_batched
@@ -219,6 +219,11 @@ class HSSSVMEngine:
         else:
             hss = compression.compress(
                 jnp.asarray(xp_host), t, self.spec, self.comp)
+        # Adaptive builds (comp.rtol set): slice every level down to its
+        # observed max rank before factorizing — the factorization and every
+        # downstream solve/matmat then run at the detected ranks, mesh
+        # placement preserved via the shared node_partition_spec rule.
+        hss, rank_info = shrink_report(hss, mesh=mesh)
         jax.block_until_ready(hss.d_leaf)
         t1 = time.perf_counter()
         beta = self.beta if self.beta is not None else admm_mod.paper_beta(
@@ -251,6 +256,8 @@ class HSSSVMEngine:
             memory_mb=hss.memory_bytes() / 1e6,
             hss_levels=t.levels,
             beta=beta,
+            kernel_evals=compression.kernel_eval_count(t, self.comp),
+            **rank_info,
         )
         return self._report
 

@@ -57,38 +57,61 @@ class HSSFactorization:
         return hss_solve_mat(self, b)
 
 
-def _leaf_factors(d_shift: Array, u: Array) -> tuple[Array, Array, Array]:
-    """Batched leaf EGD̂ from Cholesky of the shifted diagonal blocks."""
+def _leaf_factors(d_shift: Array, u: Array, mask: Array | None = None
+                  ) -> tuple[Array, Array, Array]:
+    """Batched leaf EGD̂ from Cholesky of the shifted diagonal blocks.
 
-    def one(d_i: Array, u_i: Array):
+    ``mask`` (n_leaf, r) is the adaptive build's per-node skeleton liveness
+    (``HSSMatrix.rank_masks``): dead columns of U are exact zeros, so
+    Ŝ = Uᵀ D⁻¹ U is structurally singular — adding 1 on each dead diagonal
+    slot makes it [[Ŝ_live, 0], [0, I]] (the zero cross blocks are exact),
+    whose inverse keeps the live block's exact D̂ and decouples dead slots
+    as inert unit equations: E's dead columns stay exactly 0 and every live
+    value matches the factorization of the sliced-down representation.
+    """
+
+    def one(d_i: Array, u_i: Array, mask_i: Array | None = None):
         m = d_i.shape[0]
         chol = jsl.cholesky(d_i, lower=True)
         dinv_u = jsl.cho_solve((chol, True), u_i)             # (m, r)
         s_hat = u_i.T @ dinv_u                                # (r, r)
+        if mask_i is not None:
+            s_hat = s_hat + jnp.diag(1.0 - mask_i)
         d_hat = jnp.linalg.inv(s_hat)
         e_i = dinv_u @ d_hat                                  # (m, r)
         dinv = jsl.cho_solve((chol, True), jnp.eye(m, dtype=d_i.dtype))
         g_i = dinv - e_i @ dinv_u.T
         return e_i, g_i, d_hat
 
-    return jax.vmap(one)(d_shift, u)
+    if mask is None:
+        return jax.vmap(one)(d_shift, u)
+    return jax.vmap(one)(d_shift, u, mask)
 
 
-def _level_factors(d_blk: Array, u: Array) -> tuple[Array, Array, Array]:
-    """Batched reduced-level EGD̂ via LU of the (2r x 2r) assembled blocks."""
+def _level_factors(d_blk: Array, u: Array, mask: Array | None = None
+                   ) -> tuple[Array, Array, Array]:
+    """Batched reduced-level EGD̂ via LU of the (2r x 2r) assembled blocks.
 
-    def one(d_i: Array, u_i: Array):
+    ``mask`` (n_k, r_k) regularizes dead PARENT skeleton slots exactly as in
+    ``_leaf_factors`` (the transfer's dead columns are exact zeros).
+    """
+
+    def one(d_i: Array, u_i: Array, mask_i: Array | None = None):
         c = d_i.shape[0]
         lu, piv = jsl.lu_factor(d_i)
         dinv_u = jsl.lu_solve((lu, piv), u_i)
         s_hat = u_i.T @ dinv_u
+        if mask_i is not None:
+            s_hat = s_hat + jnp.diag(1.0 - mask_i)
         d_hat = jnp.linalg.inv(s_hat)
         e_i = dinv_u @ d_hat
         dinv = jsl.lu_solve((lu, piv), jnp.eye(c, dtype=d_i.dtype))
         g_i = dinv - e_i @ dinv_u.T
         return e_i, g_i, d_hat
 
-    return jax.vmap(one)(d_blk, u)
+    if mask is None:
+        return jax.vmap(one)(d_blk, u)
+    return jax.vmap(one)(d_blk, u, mask)
 
 
 def _assemble_next(d_hat: Array, b: Array) -> Array:
@@ -129,12 +152,16 @@ def factorize(hss: HSSMatrix, beta: float,
             levels=0, leaf_size=m, beta=beta,
         )
 
-    e_leaf, g_leaf, d_hat = _leaf_factors(d_shift, hss.u_leaf)
+    masks = hss.rank_masks()
+    e_leaf, g_leaf, d_hat = _leaf_factors(
+        d_shift, hss.u_leaf, None if masks is None else masks[0])
     e_lvls: list[Array] = []
     g_lvls: list[Array] = []
     for k in range(1, K):
         d_blk = _assemble_next(d_hat, hss.b_mats[k - 1])
-        e_k, g_k, d_hat = _level_factors(d_blk, hss.transfers[k - 1])
+        e_k, g_k, d_hat = _level_factors(
+            d_blk, hss.transfers[k - 1],
+            None if masks is None else masks[1][k - 1])
         e_lvls.append(e_k)
         g_lvls.append(g_k)
     root = _assemble_next(d_hat, hss.b_mats[K - 1])[0]
@@ -190,15 +217,30 @@ def factorize_sharded(hss: HSSMatrix, beta: float, mesh,
     sd = None if store_dtype is None else jnp.dtype(store_dtype)
 
     @jax.jit
-    def _build(d_leaf, u_leaf, transfers, b_mats):
+    def _build(d_leaf, u_leaf, transfers, b_mats, leaf_ranks, level_ranks):
         dtype = d_leaf.dtype
+
+        def mask(ranks, cap):
+            # Adaptive skeleton-liveness masks (the shared hss.rank_mask
+            # rule), built in-graph from the rank vectors so the whole
+            # factorization stays ONE jitted program.
+            if ranks is None:
+                return None
+            from repro.core.hss import rank_mask
+
+            return rank_mask(ranks, cap, dtype)
+
         d_shift = pin(d_leaf) + beta * jnp.eye(m, dtype=dtype)
-        e_leaf, g_leaf, d_hat = _leaf_factors(d_shift, pin(u_leaf))
+        e_leaf, g_leaf, d_hat = _leaf_factors(
+            d_shift, pin(u_leaf), mask(leaf_ranks, u_leaf.shape[-1]))
         e_leaf, g_leaf, d_hat = pin(e_leaf), pin(g_leaf), pin(d_hat)
         e_lvls, g_lvls = [], []
         for k in range(1, K):
             d_blk = pin(_assemble_next(d_hat, pin(b_mats[k - 1])))
-            e_k, g_k, d_hat = _level_factors(d_blk, pin(transfers[k - 1]))
+            e_k, g_k, d_hat = _level_factors(
+                d_blk, pin(transfers[k - 1]),
+                mask(None if leaf_ranks is None else level_ranks[k - 1],
+                     transfers[k - 1].shape[-1]))
             e_k, g_k, d_hat = pin(e_k), pin(g_k), pin(d_hat)
             e_lvls.append(e_k)
             g_lvls.append(g_k)
@@ -213,7 +255,8 @@ def factorize_sharded(hss: HSSMatrix, beta: float, mesh,
                 lu, piv)
 
     e_leaf, g_leaf, e_lvls, g_lvls, lu, piv = _build(
-        hss.d_leaf, hss.u_leaf, hss.transfers, hss.b_mats)
+        hss.d_leaf, hss.u_leaf, hss.transfers, hss.b_mats,
+        hss.leaf_ranks, hss.level_ranks)
     return HSSFactorization(
         e_leaf=e_leaf, g_leaf=g_leaf,
         e_lvls=e_lvls, g_lvls=g_lvls,

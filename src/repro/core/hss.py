@@ -28,6 +28,18 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+def rank_mask(ranks: Array, cap: int, dtype=jnp.float32) -> Array:
+    """(n,) per-node rank vector -> (n, cap) skeleton-liveness mask.
+
+    1.0 on live slots (j < rank), 0.0 on truncated ones.  THE one definition
+    of liveness: the build (compression), the representation
+    (``HSSMatrix.rank_masks``) and the factorization all defer here so the
+    structural-zero invariant can never drift between layers.  Works inside
+    jit/shard_map (pure jnp ops on the traced rank vector).
+    """
+    return (jnp.arange(cap)[None, :] < ranks[:, None]).astype(dtype)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class HSSMatrix:
@@ -44,6 +56,13 @@ class HSSMatrix:
     b_mats: tuple[Array, ...]
     levels: int = dataclasses.field(metadata=dict(static=True))
     leaf_size: int = dataclasses.field(metadata=dict(static=True))
+    # Adaptive-rank (tolerance-driven) builds only; None/() = fixed-rank.
+    # Per-node NUMERICAL ranks detected by the pivoted-QR tolerance: columns
+    # ≥ rank of that node's u_leaf/transfer block are exactly zero, as are
+    # the b_mats rows/columns of its dead skeletons — the per-level array
+    # shapes stay static at the rank cap, the masks carry the adaptivity.
+    leaf_ranks: Array | None = None          # (n_leaf,) int32
+    level_ranks: tuple[Array, ...] = ()      # per k=1..K-1: (n_k,) int32
 
     @property
     def n(self) -> int:
@@ -55,10 +74,35 @@ class HSSMatrix:
 
     @property
     def ranks(self) -> list[int]:
+        """Per-level STORED rank caps (array column counts), k = 0..K-1."""
         r = [self.u_leaf.shape[-1]]
         for t in self.transfers:
             r.append(t.shape[-1])
         return r
+
+    @property
+    def adaptive(self) -> bool:
+        return self.leaf_ranks is not None
+
+    def observed_ranks(self) -> list[int]:
+        """Per-level max NUMERICAL rank over the level's nodes.
+
+        Equals ``ranks`` for fixed-rank builds; for adaptive builds this is
+        what ``shrink_to_fit`` slices each level down to.  Host sync.
+        """
+        if not self.adaptive:
+            return self.ranks
+        import numpy as np
+
+        out = [int(np.max(np.asarray(jax.device_get(self.leaf_ranks))))]
+        for r in self.level_ranks:
+            out.append(int(np.max(np.asarray(jax.device_get(r)))))
+        return out
+
+    def stored_rank_sum(self) -> int:
+        """Σ_levels n_k · (stored rank cap): the paper's O(N r) storage knob
+        in units of skeleton slots — decreases under shrink_to_fit."""
+        return sum(r * (self.n_leaves >> k) for k, r in enumerate(self.ranks))
 
     def shifted(self, beta: float) -> "HSSMatrix":
         """K̃ + beta I (shift lives on the leaf diagonal blocks only)."""
@@ -174,10 +218,107 @@ class HSSMatrix:
                 ubig = nxt
         return out
 
+    def rank_masks(self) -> tuple[Array, tuple[Array, ...]] | None:
+        """Per-level skeleton-liveness masks from the stored rank vectors.
+
+        Returns (leaf_mask (n_leaf, r0), level_masks[k-1] (n_k, r_k)) with
+        1.0 on live skeleton slots and 0.0 on truncated ones, or None for
+        fixed-rank builds.  Consumed by the factorization to regularize the
+        (structurally singular) reduced Schur blocks of masked bases.
+        """
+        if not self.adaptive:
+            return None
+        dtype = self.u_leaf.dtype
+        leaf = rank_mask(self.leaf_ranks, self.u_leaf.shape[-1], dtype)
+        lvls = tuple(
+            rank_mask(r, t.shape[-1], dtype)
+            for r, t in zip(self.level_ranks, self.transfers))
+        return leaf, lvls
+
     def memory_bytes(self) -> int:
         """Storage of the representation (the paper's 'Memory [MB]' column)."""
         leaves = [self.d_leaf, self.u_leaf, self.skel_leaf]
         total = sum(int(a.size) * a.dtype.itemsize for a in leaves)
         for t in (*self.transfers, *self.skels, *self.b_mats):
             total += int(t.size) * t.dtype.itemsize
+        if self.adaptive:
+            for t in (self.leaf_ranks, *self.level_ranks):
+                total += int(t.size) * t.dtype.itemsize
         return total
+
+
+def shrink_to_fit(hss: HSSMatrix, mesh=None, multiple: int = 1) -> HSSMatrix:
+    """Slice every level's stacked arrays down to the level's max observed rank.
+
+    The adaptive build keeps shapes static at the rank cap and zeroes the
+    truncated columns; this host-side pass is where the representation — and
+    everything downstream: factorization, per-iteration solves, matmats —
+    actually gets smaller.  Exact, not approximate: every sliced-away slot is
+    structurally zero (dead u/transfer columns, dead b_mats rows/columns), so
+    matmat/solve parity with the unshrunk matrix is float-noise only.
+
+    ``multiple`` rounds each level's new cap up (e.g. 8 for TPU lane
+    friendliness); ``mesh`` re-pins node-stacked outputs to the shared
+    ``dist.api.node_partition_spec`` placement so a mesh-resident build stays
+    sharded through the shrink.  Fixed-rank builds are returned unchanged.
+    """
+    if not hss.adaptive:
+        return hss
+    K = hss.levels
+    caps = hss.ranks
+    new_caps = [
+        min(cap, max(1, -(-obs // multiple) * multiple))
+        for cap, obs in zip(caps, hss.observed_ranks())
+    ]
+    if new_caps == caps:
+        return hss
+
+    def put(a: Array) -> Array:
+        if mesh is None:
+            return a
+        from jax.sharding import NamedSharding
+
+        from repro.dist.api import node_partition_spec
+
+        return jax.device_put(
+            a, NamedSharding(mesh, node_partition_spec(mesh, a.ndim,
+                                                       a.shape[0])))
+
+    r0 = new_caps[0]
+    u_leaf = put(hss.u_leaf[:, :, :r0])
+    skel_leaf = hss.skel_leaf[:, :r0]
+    transfers, skels, b_mats = [], [], []
+    for k in range(1, K + 1):
+        rc = new_caps[k - 1]                     # child-level cap
+        b_mats.append(put(hss.b_mats[k - 1][:, :rc, :rc]))
+        if k == K:
+            break
+        rk = new_caps[k]
+        t = hss.transfers[k - 1]
+        n_k, two_rc_old = t.shape[0], t.shape[1]
+        t = t.reshape(n_k, 2, two_rc_old // 2, t.shape[2])
+        t = t[:, :, :rc, :rk].reshape(n_k, 2 * rc, rk)
+        transfers.append(put(t))
+        skels.append(hss.skels[k - 1][:, :rk])
+    return dataclasses.replace(
+        hss,
+        u_leaf=u_leaf,
+        skel_leaf=skel_leaf,
+        transfers=tuple(transfers),
+        skels=tuple(skels),
+        b_mats=tuple(b_mats),
+    )
+
+
+def shrink_report(hss: HSSMatrix, mesh=None) -> tuple[HSSMatrix, dict]:
+    """``shrink_to_fit`` plus the rank-trajectory fields of ``FitReport``.
+
+    Returns the (possibly) shrunk matrix and a dict of ranks_pre/ranks_post/
+    rank_sum_pre/rank_sum_post; fixed-rank builds pass through unchanged
+    with pre == post.  Shared by the engine and both trainers.
+    """
+    info = dict(ranks_pre=tuple(hss.ranks), rank_sum_pre=hss.stored_rank_sum())
+    hss = shrink_to_fit(hss, mesh=mesh)
+    info.update(ranks_post=tuple(hss.ranks),
+                rank_sum_post=hss.stored_rank_sum())
+    return hss, info

@@ -56,38 +56,101 @@ def cpqr_select(m_mat: Array, k: int) -> tuple[Array, Array]:
     return piv, qs
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def interp_decomp(m_mat: Array, k: int, rtol: float = 1e-5) -> tuple[Array, Array]:
-    """Column ID:  M ≈ M[:, J] @ T  with  T[:, J] = I_k.
+def _interp_core(m_mat: Array, k: int, rtol: float, keep_identity: bool
+                 ) -> tuple[Array, Array, Array]:
+    """Shared ID core: pivoted QR, tolerance truncation, triangular solve.
 
-    T comes from the triangular factor of the pivoted QR: with Q from
-    cpqr_select, R = QᵀM and R_J = Qᵀ M[:, J] is (numerically) upper
-    triangular in pivot order, so T = R_J⁻¹ R.  When the numerical rank of M
-    is below k — which happens by design, the HSS rank is a static cap (cf.
-    hss_max_rank in the paper), and for leaves made of inert padding points —
-    the trailing R_J diagonal entries underflow and a raw solve yields
-    NaN/garbage.  Rows whose diagonal falls below ``rtol * max|diag|`` are
-    truncated: their basis directions carry no signal, so dropping them gives
-    the best-available rank-r interpolation instead of amplified noise.
+    Returns (piv, T, rank).  With Q from cpqr_select, R = QᵀM and
+    R_J = Qᵀ M[:, J] is (numerically) upper triangular in pivot order, so
+    T = R_J⁻¹ R.  The greedy pivoting makes |R_J[i, i]| (the residual norm at
+    step i) non-increasing, so its decay against ``rtol * |R_J[0, 0]|``
+    reveals the numerical rank: ``rank`` is the longest prefix of directions
+    above the tolerance (STRUMPACK's rel_tol semantics — the static ``k`` is
+    only the hss_max_rank cap).  Truncated directions get a unit diagonal +
+    zeroed row, which makes the triangular solve exact and finite instead of
+    amplifying noise through an underflowed diagonal.
+
+    ``keep_identity=True`` (legacy fixed-rank mode) re-enforces T[:, J] = I_k
+    on ALL k skeleton columns, so even truncated skeletons interpolate
+    themselves exactly — shapes and downstream factorizations see a full-rank
+    basis.  ``keep_identity=False`` (adaptive mode) instead zeroes every
+    truncated row of T: columns ≥ rank of the resulting interpolation basis
+    are exactly 0, which is what lets callers mask and later slice them away
+    without changing any live value.
     """
     piv, qs = cpqr_select(m_mat, k)
     r_full = qs.T @ m_mat                                   # (k, n)
     r_skel = jnp.triu(jnp.take(r_full, piv, axis=1))        # (k, k) upper-tri
     diag = jnp.diagonal(r_skel)
     tol = rtol * jnp.maximum(jnp.max(jnp.abs(diag)), 1e-30)
-    keep = jnp.abs(diag) > tol
-    # Truncate rank-deficient directions: unit diagonal + zeroed row makes
-    # the triangular solve exact and finite for the dropped rows.
+    above = jnp.abs(diag) > tol
+    if keep_identity:
+        # Legacy fixed-rank mode keeps its historical elementwise truncation
+        # (NaN-safety only — a below-tol direction sandwiched between kept
+        # ones stays dropped individually, exactly as before adaptivity).
+        keep = above
+    else:
+        # Prefix rank: float noise can make |diag| non-monotone near the
+        # tolerance; everything after the first below-tol direction is dead
+        # so the live directions are a contiguous leading block
+        # (maskable/sliceable by column index).
+        keep = jnp.cumsum(jnp.logical_not(above)) == 0
+    rank = jnp.sum(keep).astype(jnp.int32)
     r_safe = jnp.where(keep[:, None], r_skel, 0.0) + jnp.diag(
         jnp.where(keep, 0.0, 1.0).astype(m_mat.dtype))
     rhs = jnp.where(keep[:, None], r_full, 0.0)
     t_full = jax.scipy.linalg.solve_triangular(r_safe, rhs, lower=False)
-    # Enforce exact identity on skeleton columns.
-    t_full = t_full.at[:, piv].set(jnp.eye(k, dtype=m_mat.dtype))
+    if keep_identity:
+        # Exact identity on all skeleton columns (legacy fixed-rank mode).
+        t_full = t_full.at[:, piv].set(jnp.eye(k, dtype=m_mat.dtype))
+    else:
+        # Exact identity on LIVE skeleton columns only.  A truncated pivot
+        # is not a skeleton: its column keeps the solved interpolation
+        # weights over the live skeletons (zeroing it would drop that
+        # column's full contribution, not its below-tolerance residual).
+        keep_f = keep.astype(m_mat.dtype)
+        at_piv = jnp.take(t_full, piv, axis=1)               # (k, k)
+        t_full = t_full.at[:, piv].set(jnp.where(
+            keep[None, :], jnp.eye(k, dtype=m_mat.dtype), at_piv))
+        t_full = t_full * keep_f[:, None]
+    return piv, t_full, rank
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def interp_decomp(m_mat: Array, k: int, rtol: float = 1e-5) -> tuple[Array, Array]:
+    """Column ID:  M ≈ M[:, J] @ T  with  T[:, J] = I_k.
+
+    Fixed-rank view: ``rtol`` here is only the NaN-safety truncation for
+    rank-deficient blocks (e.g. leaves of inert padding points); all k
+    skeleton columns keep their exact-identity interpolation.  Use
+    ``interp_decomp_ranked`` for the adaptive tolerance-driven variant.
+    """
+    piv, t_full, _ = _interp_core(m_mat, k, rtol, keep_identity=True)
     return piv, t_full
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def interp_decomp_ranked(m_mat: Array, k: int, rtol: float = 1e-5
+                         ) -> tuple[Array, Array, Array]:
+    """Adaptive column ID: (piv, T, rank) with rows ≥ rank of T exactly 0.
+
+    ``rank`` is the numerical rank detected from the pivoted-QR diagonal
+    decay against ``rtol`` (k stays the static cap, so shapes never depend
+    on data).  T[:, J] = I on the first ``rank`` skeleton columns and 0 on
+    the truncated ones, so a caller-side column mask ``arange(k) < rank``
+    over the interpolation basis is exact, not approximate.
+    """
+    return _interp_core(m_mat, k, rtol, keep_identity=False)
 
 
 def row_interp_decomp(m_mat: Array, k: int) -> tuple[Array, Array]:
     """Row ID:  M ≈ P @ M[J, :]  with P (rows, k), P[J, :] = I_k."""
     piv, t = interp_decomp(m_mat.T, k)
     return piv, t.T
+
+
+def row_interp_decomp_ranked(m_mat: Array, k: int, rtol: float = 1e-5
+                             ) -> tuple[Array, Array, Array]:
+    """Adaptive row ID: M ≈ P @ M[J, :] with P columns ≥ rank exactly 0."""
+    piv, t, rank = interp_decomp_ranked(m_mat.T, k, rtol)
+    return piv, t.T, rank

@@ -74,8 +74,21 @@ def laplacian_block_xla(xa: Array, xb: Array, h: float,
     return jnp.exp(-d1 / h)
 
 
+_VALID_IMPLS = ("xla", "pallas", "pallas_interpret")
+
+
 def kernel_block(spec: KernelSpec, xa: Array, xb: Array) -> Array:
-    """Evaluate a (len(xa), len(xb)) kernel block under ``spec``."""
+    """Evaluate a (len(xa), len(xb)) kernel block under ``spec``.
+
+    Only the gaussian kernel has a Pallas implementation.  A laplacian spec
+    asking for ``impl="pallas"`` falls back to the XLA path with an explicit
+    ``RuntimeWarning`` — previously the request was silently ignored, which
+    made "pallas speedup" measurements on the laplacian kernel meaningless.
+    Unknown ``impl`` values raise instead of silently running XLA.
+    """
+    if spec.impl not in _VALID_IMPLS:
+        raise ValueError(
+            f"unknown kernel impl {spec.impl!r}; expected one of {_VALID_IMPLS}")
     if spec.name == "gaussian":
         if spec.impl in ("pallas", "pallas_interpret"):
             # Deferred import: kernels package depends on core being importable.
@@ -86,6 +99,13 @@ def kernel_block(spec: KernelSpec, xa: Array, xb: Array) -> Array:
             )
         return gaussian_block_xla(xa, xb, spec.h)
     if spec.name == "laplacian":
+        if spec.impl in ("pallas", "pallas_interpret"):
+            import warnings
+
+            warnings.warn(
+                f"KernelSpec(name='laplacian', impl={spec.impl!r}): the "
+                "laplacian kernel has no Pallas implementation; falling back "
+                "to the XLA block path", RuntimeWarning, stacklevel=2)
         return laplacian_block_xla(xa, xb, spec.h)
     raise ValueError(f"unknown kernel {spec.name!r}")
 

@@ -32,9 +32,11 @@ import numpy as np
 
 from repro.core import admm as admm_mod
 from repro.core import compression, factorization, tree as tree_mod
-from repro.core.hss import HSSMatrix
+from repro.core.hss import HSSMatrix, shrink_report
 from repro.core.kernelfn import KernelSpec, kernel_matvec_streamed
-from repro.core.svm import FitReport, compute_bias_batched, run_grid_search
+from repro.core.svm import (
+    FitReport, compute_bias_batched, resolve_rtol, run_grid_search,
+)
 
 Array = jax.Array
 
@@ -164,6 +166,9 @@ class MulticlassHSSSVMTrainer:
 
         t0 = time.perf_counter()
         hss = compression.compress(xp, t, self.spec, self.comp)
+        # Adaptive builds shrink to the observed ranks before factorizing:
+        # ALL k class subproblems then share the smaller factors.
+        hss, rank_info = shrink_report(hss)
         jax.block_until_ready(hss.d_leaf)
         t1 = time.perf_counter()
         beta = self.beta if self.beta is not None else admm_mod.paper_beta(d_real)
@@ -182,6 +187,8 @@ class MulticlassHSSSVMTrainer:
             memory_mb=hss.memory_bytes() / 1e6,
             hss_levels=t.levels,
             beta=beta,
+            kernel_evals=compression.kernel_eval_count(t, self.comp),
+            **rank_info,
         )
         return self._report
 
@@ -251,14 +258,17 @@ def grid_search_multiclass(
     hs: Sequence[float],
     cs: Sequence[float],
     trainer_kwargs: dict | None = None,
+    rtol: float | None = None,
 ) -> tuple[MulticlassSVMModel, dict]:
     """(h, C) grid over the full (C × class) product (paper §3.3, batched).
 
     Per h: ONE compression + ONE factorization serve the whole C sweep of
     ALL k class subproblems; consecutive C values warm-start every class
-    column from the previous (d, P) iterates at once.
+    column from the previous (d, P) iterates at once.  ``rtol`` switches
+    each h's build to the adaptive tolerance-driven compression (crude ≈
+    1e-2, accurate ≈ 1e-4 — see ``svm.resolve_rtol``).
     """
-    kw = dict(trainer_kwargs or {})
+    kw = resolve_rtol(trainer_kwargs, rtol)
     return run_grid_search(
         lambda h: MulticlassHSSSVMTrainer(spec=KernelSpec(h=h), **kw),
         x, y, x_val, y_val, hs, cs)

@@ -45,3 +45,94 @@ def test_row_interp_decomp():
     rec = p @ jnp.take(a, piv, axis=0)
     err = float(jnp.linalg.norm(rec - a) / jnp.linalg.norm(a))
     assert err < 1e-3
+
+
+# --------------------------------------------------------------------- #
+# adaptive (tolerance-driven) rank detection                            #
+# --------------------------------------------------------------------- #
+def _decaying(m, n, sigmas, seed=0):
+    """Matrix with prescribed singular-value-like decay."""
+    rng = np.random.default_rng(seed)
+    r = len(sigmas)
+    u, _ = np.linalg.qr(rng.normal(size=(m, r)))
+    v, _ = np.linalg.qr(rng.normal(size=(n, r)))
+    return jnp.asarray(u @ np.diag(sigmas) @ v.T, jnp.float32)
+
+
+@pytest.mark.parametrize("true_rank", [3, 6, 10])
+def test_ranked_detects_exact_numerical_rank(true_rank):
+    """A matrix with exactly ``true_rank`` non-negligible directions is
+    detected at that rank (cap 16) and reconstructed to the noise floor."""
+    sigmas = [2.0 ** -i for i in range(true_rank)] + [1e-7] * 4
+    a = _decaying(40, 32, sigmas)
+    piv, t, rank = idqr.interp_decomp_ranked(a, 16, rtol=1e-4)
+    assert int(rank) == true_rank, (int(rank), true_rank)
+    rec = jnp.take(a, piv, axis=1) @ t
+    err = float(jnp.linalg.norm(rec - a) / jnp.linalg.norm(a))
+    assert err < 1e-3, err
+    # truncated rows of T are exact zeros -> column masks are exact
+    assert float(jnp.abs(t[true_rank:]).max()) == 0.0
+
+
+def test_ranked_rank_decreases_with_looser_rtol():
+    """Monotone knob: looser tolerance => smaller detected rank, and the
+    reconstruction error tracks the tolerance."""
+    a = _decaying(64, 48, [3.0 ** -i for i in range(14)])
+    prev_rank = 15
+    for rtol in (1e-6, 1e-4, 1e-2, 1e-1):
+        piv, t, rank = idqr.interp_decomp_ranked(a, 14, rtol=rtol)
+        assert int(rank) <= prev_rank
+        prev_rank = int(rank)
+        rec = jnp.take(a, piv, axis=1) @ t
+        err = float(jnp.linalg.norm(rec - a) / jnp.linalg.norm(a))
+        assert err < 40 * rtol + 1e-5, (rtol, int(rank), err)
+    assert prev_rank < 14  # 10% tolerance must actually truncate
+
+
+def test_ranked_interpolates_truncated_pivots():
+    """A truncated pivot's column must be interpolated by the live
+    skeletons, NOT zeroed: zeroing drops the whole column, not just the
+    below-tolerance residual (the bug this pins)."""
+    a = _decaying(48, 36, [2.0 ** -i for i in range(12)])
+    piv, t, rank = idqr.interp_decomp_ranked(a, 12, rtol=1e-2)
+    assert int(rank) < 12
+    dead = np.asarray(piv)[int(rank):]
+    rec = np.asarray(jnp.take(a, piv, axis=1) @ t)
+    a_n = np.asarray(a)
+    col_err = np.linalg.norm(rec[:, dead] - a_n[:, dead], axis=0)
+    col_nrm = np.linalg.norm(a_n[:, dead], axis=0)
+    assert (col_err < 0.5 * col_nrm).all(), (col_err, col_nrm)
+
+
+def test_ranked_padded_leaf_rank_deficient():
+    """The padded-leaf case: rows/columns of inert (near-zero kernel)
+    padding make the block rank-deficient — detection must not count the
+    dead directions and everything must stay finite (the seed-era NaN)."""
+    a_live = _lowrank(24, 18, 5, seed=3)
+    a = jnp.zeros((24, 30), jnp.float32).at[:, :18].set(a_live)
+    piv, t, rank = idqr.interp_decomp_ranked(a, 12, rtol=1e-5)
+    assert bool(jnp.isfinite(t).all())
+    assert int(rank) <= 6            # ~5 real directions, never the 12 cap
+    rec = jnp.take(a, piv, axis=1) @ t
+    err = float(jnp.linalg.norm(rec - a) / jnp.linalg.norm(a))
+    assert err < 1e-3, err
+    # row ID view: zero ROWS (pad points) keep zero interpolation weights
+    piv_r, p, rank_r = idqr.row_interp_decomp_ranked(a.T, 12, rtol=1e-5)
+    assert bool(jnp.isfinite(p).all())
+    rec_r = p @ jnp.take(a.T, piv_r, axis=0)
+    assert float(jnp.linalg.norm(rec_r - a.T) /
+                 jnp.linalg.norm(a)) < 1e-3
+
+
+def test_ranked_full_rank_matches_fixed():
+    """On a full-rank-at-cap block the adaptive ID detects the cap and the
+    fixed path's reconstruction quality is preserved."""
+    a = _lowrank(40, 30, 10, noise=1e-3)
+    piv_f, t_f = idqr.interp_decomp(a, 8)
+    piv_a, t_a, rank = idqr.interp_decomp_ranked(a, 8, rtol=1e-4)
+    assert int(rank) == 8
+    np.testing.assert_array_equal(np.asarray(piv_f), np.asarray(piv_a))
+    rec_f = jnp.take(a, piv_f, axis=1) @ t_f
+    rec_a = jnp.take(a, piv_a, axis=1) @ t_a
+    np.testing.assert_allclose(np.asarray(rec_a), np.asarray(rec_f),
+                               rtol=1e-4, atol=1e-5)

@@ -123,6 +123,34 @@ def test_laplacian_kernel_svm():
     assert acc > 0.9
 
 
+def test_laplacian_pallas_impl_warns_and_falls_back():
+    """Pins kernel_block's laplacian+pallas behavior: an explicit
+    RuntimeWarning (previously the impl was silently ignored) and the XLA
+    result; unknown impl strings raise instead of silently running XLA."""
+    import warnings
+
+    import pytest
+
+    from repro.core.kernelfn import (
+        KernelSpec, kernel_block, laplacian_block_xla)
+
+    rng = np.random.default_rng(11)
+    xa = jnp.asarray(rng.normal(size=(12, 4)), jnp.float32)
+    xb = jnp.asarray(rng.normal(size=(9, 4)), jnp.float32)
+    with pytest.warns(RuntimeWarning, match="no Pallas implementation"):
+        out = kernel_block(KernelSpec(name="laplacian", impl="pallas", h=1.3),
+                           xa, xb)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(laplacian_block_xla(xa, xb, 1.3)),
+        rtol=1e-6, atol=1e-6)
+    # the xla path must NOT warn
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        kernel_block(KernelSpec(name="laplacian", impl="xla", h=1.3), xa, xb)
+    with pytest.raises(ValueError, match="unknown kernel impl"):
+        kernel_block(KernelSpec(name="gaussian", impl="cuda", h=1.3), xa, xb)
+
+
 def test_laplacian_block_chunked_matches_broadcast():
     """The feature-chunked laplacian_block_xla == the naive (ma, mb, f)
     broadcast, across feature counts off/on/below the chunk boundary."""
