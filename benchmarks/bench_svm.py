@@ -19,6 +19,11 @@ cases isolate the tolerance-driven win on smooth (2-feature) kernels: same
 holdout accuracy, several-fold smaller stored rank sum, faster
 factorization.
 
+The ``svm_tasks/*`` cases run the non-classification members of the box-QP
+family (ε-SVR on noisy-sine, ν one-class on blobs-with-outliers) through
+the SAME engine and factorization machinery; their "accuracy" fields hold
+R² / balanced detection accuracy so the drift guard covers them too.
+
 All cases drive repro.core.engine.HSSSVMEngine — the same orchestration the
 launch/ and examples/ layers use — and every case additionally records a
 machine-readable dict.  ``python benchmarks/bench_svm.py --json
@@ -241,6 +246,68 @@ def run_adaptive(csv_rows: list, scale: float = 1.0) -> None:
         ))
 
 
+TASK_CASES = [
+    # (task, dataset, kwargs, n_train, n_test, h, knob): the non-
+    # classification members of the box-QP family on the same engine —
+    # the "accuracy" field holds R² for SVR and balanced inlier/outlier
+    # accuracy for one-class, so ci/check_bench.py guards their quality
+    # drift exactly like the classification cases.
+    ("svr", "noisy_sine", dict(noise=0.1), 8192, 2048, 1.0, 0.1),
+    ("oneclass", "blobs_with_outliers", dict(outlier_frac=0.1),
+     8192, 2048, 2.0, 0.1),
+]
+
+
+def run_tasks(csv_rows: list, scale: float = 1.0) -> None:
+    """ε-SVR and one-class SVM through the SAME engine + crude preset.
+
+    Records one case per task: quality (R² / balanced accuracy — both
+    higher-is-better and scale-free, so the accuracy-drift guard applies),
+    the task-specific raw metric, and the usual stage timings.
+    """
+    comp = PRESETS["crude"]
+    for task, name, kw, n_train, n_test, h, knob in TASK_CASES:
+        n_train_s = int(n_train * scale)
+        n_test_s = max(int(n_test * scale), 256)
+        xtr, ytr, xte, yte = synthetic.train_test(
+            name, n_train_s, n_test_s, seed=0, **kw)
+        engine = HSSSVMEngine(
+            spec=KernelSpec(h=h), comp=comp, leaf_size=256,
+            max_it=30 if task == "oneclass" else 10, task=task, svr_c=2.0)
+        rep = engine.prepare(xtr, None if task == "oneclass" else ytr)
+        model, _ = engine.train(knob)
+        if task == "svr":
+            pred = np.asarray(model.predict(jnp.asarray(xte)))
+            rmse = float(np.sqrt(np.mean((pred - yte) ** 2)))
+            var = float(np.var(yte))
+            quality = 1.0 - rmse ** 2 / max(var, 1e-12)       # R²
+            extra = dict(rmse=rmse)
+            detail = f"r2={quality:.4f};rmse={rmse:.4f}"
+        else:
+            from repro.core.tasks import oneclass_metrics
+
+            m = oneclass_metrics(model.predict(jnp.asarray(xte)), yte)
+            quality = m["balanced_accuracy"]
+            extra = dict(precision=m["precision"], recall=m["recall"])
+            detail = (f"balanced_acc={quality:.4f};prec={m['precision']:.4f};"
+                      f"recall={m['recall']:.4f}")
+        _record(
+            f"svm_tasks/{task}/{name}",
+            n_train=n_train_s, accuracy=float(quality), knob=knob,
+            compression_s=rep.compression_s,
+            factorization_s=rep.factorization_s,
+            admm_s=rep.admm_s, memory_mb=rep.memory_mb,
+            peak_device_bytes=peak_device_bytes(engine.hss, engine.fac),
+            **extra, **_rank_fields(rep),
+        )
+        csv_rows.append((
+            f"svm_tasks/{task}/{name}",
+            rep.admm_s * 1e6,
+            f"{detail};compress_s={rep.compression_s:.2f};"
+            f"factor_s={rep.factorization_s:.2f};admm_s={rep.admm_s:.3f}",
+        ))
+
+
 MULTICLASS_CASES = [
     # (n_classes, n_train, n_test, h, C)
     (4, 8192, 2048, 1.5, 1.0),
@@ -332,6 +399,7 @@ if __name__ == "__main__":
     rows: list = []
     run(rows, scale=scale)
     run_adaptive(rows, scale=scale)
+    run_tasks(rows, scale=scale)
     run_sharded(rows, scale=scale)
     if not (args.smoke or args.skip_multiclass):
         run_multiclass(rows)

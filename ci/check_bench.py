@@ -7,11 +7,16 @@ accuracy drift (a looser compression, a broken mask, a bad warm start) then
 breaks the bench tier instead of quietly shipping in the perf trajectory.
 
 Only cases present in BOTH files are compared, so adding or retiring bench
-cases never trips the guard; accuracy improvements pass.  Non-accuracy
-fields (timings, ranks, memory) are machine noise across hosts and are
-deliberately not guarded.
+cases never trips the guard; accuracy improvements pass.  Rank/memory
+fields are machine noise across hosts and are deliberately not guarded.
+Per-case stage wall times (compression_s / factorization_s / admm_s) get a
+WARN-ONLY check: a stage slower than --time-factor (default 2×) vs the
+committed reference is printed but never fails the run — cross-host timing
+noise makes a hard gate dishonest, but a silent 5× compression regression
+should at least be visible in the CI log.
 
 Usage: python ci/check_bench.py REF.json NEW.json [--tol 0.02]
+       [--time-factor 2.0] [--time-floor 0.05]
 """
 from __future__ import annotations
 
@@ -32,6 +37,12 @@ def main() -> int:
     ap.add_argument("new", help="freshly generated BENCH_svm.json")
     ap.add_argument("--tol", type=float, default=0.02,
                     help="max tolerated accuracy DROP per case (default 0.02)")
+    ap.add_argument("--time-factor", type=float, default=2.0,
+                    help="warn when a stage wall time exceeds this factor "
+                         "of the reference (warn-only, default 2.0)")
+    ap.add_argument("--time-floor", type=float, default=0.05,
+                    help="ignore stage times below this many seconds in the "
+                         "reference (timing noise, default 0.05)")
     args = ap.parse_args()
 
     ref, new = load_cases(args.ref), load_cases(args.new)
@@ -52,6 +63,7 @@ def main() -> int:
         return 0
 
     failures = []
+    n_warn = 0
     for case in sorted(shared):
         a_ref, a_new = ref[case]["accuracy"], new[case]["accuracy"]
         drift = a_ref - a_new
@@ -60,11 +72,25 @@ def main() -> int:
               f"{a_ref:.4f} -> {a_new:.4f} (drift {drift:+.4f})")
         if drift > args.tol:
             failures.append(case)
+        # Warn-only wall-time regression check per pipeline stage.  The
+        # floor clamps the DENOMINATOR (sub-floor reference times are
+        # timing noise) without exempting a sub-floor stage that explodes.
+        for field in ("compression_s", "factorization_s", "admm_s"):
+            t_ref, t_new = ref[case].get(field), new[case].get(field)
+            if t_ref is None or t_new is None:
+                continue
+            if t_new > args.time_factor * max(t_ref, args.time_floor):
+                n_warn += 1
+                print(f"check_bench: WARN {case}: {field} "
+                      f"{t_ref:.3f}s -> {t_new:.3f}s "
+                      f"({t_new / max(t_ref, 1e-9):.1f}x > "
+                      f"{args.time_factor:.1f}x, warn-only)")
     if failures:
         print(f"check_bench: {len(failures)}/{len(shared)} cases dropped "
               f"more than {args.tol} accuracy: {', '.join(failures)}")
         return 1
-    print(f"check_bench: {len(shared)} cases within {args.tol} of reference")
+    print(f"check_bench: {len(shared)} cases within {args.tol} of reference"
+          + (f" ({n_warn} wall-time warnings)" if n_warn else ""))
     return 0
 
 

@@ -1,6 +1,9 @@
 """The paper's contribution: HSS kernel approximation + ADMM SVM training."""
 
-from repro.core.admm import ADMMState, admm_svm, admm_svm_batched, paper_beta
+from repro.core.admm import (
+    ADMMState, BoxQPTask, admm_boxqp, admm_svm, admm_svm_batched, paper_beta,
+    svm_task,
+)
 from repro.core.compression import (
     CompressionParams, compress, compress_sharded, compression_error,
     kernel_eval_count,
@@ -15,10 +18,15 @@ from repro.core.multiclass import (
     MulticlassHSSSVMTrainer, MulticlassSVMModel, grid_search_multiclass,
 )
 from repro.core.svm import HSSSVMTrainer, SVMModel, grid_search
+from repro.core.tasks import (
+    grid_search_oneclass, grid_search_svr, one_class_task, svr_task,
+)
 from repro.core.tree import ClusterTree, build_tree, pad_dataset
 
 __all__ = [
-    "ADMMState", "admm_svm", "admm_svm_batched", "paper_beta",
+    "ADMMState", "BoxQPTask", "admm_boxqp", "admm_svm", "admm_svm_batched",
+    "paper_beta", "svm_task",
+    "grid_search_oneclass", "grid_search_svr", "one_class_task", "svr_task",
     "CompressionParams", "compress", "compress_sharded", "compression_error",
     "kernel_eval_count",
     "EngineModel", "HSSSVMEngine",

@@ -35,6 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import admm as admm_mod
 from repro.core import compression, factorization, tree as tree_mod
+from repro.core import tasks as tasks_mod
 from repro.core.hss import HSSMatrix, shrink_report
 from repro.core.kernelfn import KernelSpec, kernel_matvec_streamed
 from repro.core.multiclass import ovo_problems, ovo_vote, ovr_problems
@@ -60,13 +61,17 @@ class EngineModel:
     """
 
     x_perm: Array          # (d, f) padded+permuted training points
-    z_y: Array             # (d, P) per-problem y_i * z_i columns (pads are 0)
-    biases: Array          # (P,)
-    classes: np.ndarray    # (k,) original class labels
+    z_y: Array             # (d, P) per-problem s_i * z_i columns (pads are 0;
+                           #  y_i z_i for SVM, the dual coefficients α for
+                           #  SVR / one-class)
+    biases: Array          # (P,)  (−ρ for one-class)
+    classes: np.ndarray    # (k,) original class labels (an unused [-1, 1]
+                           #  placeholder for svr / oneclass models)
     spec: KernelSpec
-    c_value: float
+    c_value: float         # the task knob it was trained at (C / ε / ν)
     binary: bool
     strategy: str = "ovr"
+    task: str = "svm"      # "svm" | "svr" | "oneclass"
     pairs: np.ndarray | None = None     # (P, 2) class indices, ovo only
     mesh: Mesh | None = None
     _score_fns: dict | None = None      # block -> cached jitted scorer
@@ -96,7 +101,8 @@ class EngineModel:
         return fn
 
     def decision_function(self, x_test: Array, block: int = 2048) -> Array:
-        """Scores (n_test, P); for binary models the single column (n_test,)."""
+        """Scores (n_test, P); single-column tasks (binary SVM, SVR,
+        one-class) return the flat (n_test,) column."""
         x_test = jnp.asarray(x_test)
         if self.mesh is None:
             scores = kernel_matvec_streamed(
@@ -104,10 +110,16 @@ class EngineModel:
         else:
             scores = self._mesh_scorer(block)(x_test, self.x_perm, self.z_y)
         scores = scores + self.biases[None, :]
-        return scores[:, 0] if self.binary else scores
+        if self.binary or self.task in ("svr", "oneclass"):
+            return scores[:, 0]
+        return scores
 
     def predict(self, x_test: Array, block: int = 2048) -> Array:
         scores = self.decision_function(x_test, block=block)
+        if self.task == "svr":           # regression: scores ARE predictions
+            return scores
+        if self.task == "oneclass":      # +1 inlier / −1 outlier
+            return jnp.where(scores >= 0, 1, -1)
         if self.binary:
             return jnp.where(scores >= 0, 1, -1)
         if self.strategy == "ovr":
@@ -125,6 +137,19 @@ class HSSSVMEngine:
     one object; pass ``mesh`` to run every stage sharded (see module
     docstring).  ``store_dtype="bfloat16"`` stores the E/G factors in bf16
     (solves still accumulate in f32).
+
+    ``task`` selects the box-QP instance trained on the shared
+    factorization (repro.core.admm / repro.core.tasks):
+      * ``"svm"``      — classification; ``train``'s knob is C, ``y`` holds
+        labels (binary ±1 or k-class, OVR/OVO per ``strategy``);
+      * ``"svr"``      — ε-SVR; the knob is ε (the C box bound is the
+        ``svr_c`` field), ``y`` holds float regression targets;
+      * ``"oneclass"`` — ν one-class SVM; the knob is ν, ``y`` is ignored
+        (unsupervised — pass None).
+
+    ``tol`` enables the paper's residual stopping rule: a problem's ADMM
+    updates freeze once max(primal, dual) < tol and ``FitReport.iters_run``
+    records the live iteration counts (None = always run ``max_it``).
     """
 
     spec: KernelSpec
@@ -137,6 +162,9 @@ class HSSSVMEngine:
     mesh: Mesh | None = None
     strategy: str = "ovr"         # multiclass reduction: "ovr" | "ovo"
     store_dtype: str | None = None
+    task: str = "svm"             # "svm" | "svr" | "oneclass"
+    svr_c: float = 1.0            # SVR box bound C (ε is the train knob)
+    tol: float | None = None      # ADMM residual early-stop threshold
 
     # populated by prepare():
     _hss: HSSMatrix | None = None
@@ -177,20 +205,33 @@ class HSSSVMEngine:
         return levels
 
     # ------------------------------------------------------------------ #
-    def prepare(self, x: np.ndarray, y: np.ndarray) -> FitReport:
+    def prepare(self, x: np.ndarray, y: np.ndarray | None = None) -> FitReport:
         """Pad + tree + compress ONCE + factorize ONCE (Alg. 3 lines 1–6)."""
         if self.strategy not in ("ovr", "ovo"):
             raise ValueError(f"unknown strategy {self.strategy!r}")
+        if self.task not in ("svm", "svr", "oneclass"):
+            raise ValueError(f"unknown task {self.task!r}")
         x = np.asarray(x, np.float32)
-        y = np.asarray(y)
-        classes = np.unique(y)
-        if classes.shape[0] < 2:
-            raise ValueError("need at least 2 classes")
-        try:
-            vals = set(np.asarray(classes, np.float64).tolist())
-        except (TypeError, ValueError):
-            vals = set()
-        self._binary = classes.shape[0] == 2 and vals == {-1.0, 1.0}
+        if self.task == "svm":
+            if y is None:
+                raise ValueError("task='svm' needs labels")
+            y = np.asarray(y)
+            classes = np.unique(y)
+            if classes.shape[0] < 2:
+                raise ValueError("need at least 2 classes")
+            try:
+                vals = set(np.asarray(classes, np.float64).tolist())
+            except (TypeError, ValueError):
+                vals = set()
+            self._binary = classes.shape[0] == 2 and vals == {-1.0, 1.0}
+        else:
+            if self.task == "svr" and y is None:
+                raise ValueError("task='svr' needs regression targets")
+            if y is None:                # one-class is unsupervised
+                y = np.zeros(x.shape[0], np.float32)
+            y = np.asarray(y)
+            classes = np.array([-1.0, 1.0], np.float32)
+            self._binary = False
         d_real = x.shape[0]
         x_pad, y_pad, mask, levels = tree_mod.pad_dataset(
             x, y.astype(np.float32), self.leaf_size,
@@ -204,7 +245,14 @@ class HSSSVMEngine:
         yp = y_pad[t.perm]
         maskp = mask[t.perm]
 
-        if self._binary:
+        if self.task != "svm":
+            # one problem column: SVR's ys row holds the (mask-zeroed)
+            # regression targets, one-class ignores it — the participation
+            # mask is what pins pads to the inert [0, 0] box in both.
+            ys = (yp * maskp)[None, :].astype(np.float32)
+            pmasks = maskp[None, :].astype(np.float32)
+            pairs = None
+        elif self._binary:
             ys = np.where(yp > 0, 1.0, -1.0)[None, :].astype(np.float32)
             pmasks = maskp[None, :].astype(np.float32)
             pairs = None
@@ -297,22 +345,50 @@ class HSSSVMEngine:
     # ------------------------------------------------------------------ #
     def train(self, c_value: float, warm: tuple[Array, Array] | None = None
               ) -> tuple[EngineModel, tuple[Array, Array]]:
-        """ONE batched ADMM run over all P subproblems for a fixed C."""
+        """ONE batched ADMM run over all P subproblems for a fixed knob.
+
+        ``c_value`` is the task's sweep knob: C for classification, ε for
+        SVR (box bound from ``self.svr_c``), ν for one-class.  It enters the
+        jitted run as a traced scalar, so a warm-started knob sweep compiles
+        exactly once.
+        """
         assert self._fac is not None, "call prepare() first"
+        if self.task == "oneclass" and not 0.0 < c_value <= 1.0:
+            # nu > 1 makes e'alpha = 1 infeasible (box mass < 1), nu <= 0
+            # divides by zero — either silently yields a garbage model.
+            raise ValueError(f"oneclass needs 0 < nu <= 1, got {c_value}")
+        if self.task == "svr" and c_value < 0.0:
+            raise ValueError(f"svr needs epsilon >= 0, got {c_value}")
         fac, ys, pmask = self._fac, self._ys, self._pmask
         n_prob, d = ys.shape
 
         if self._jit_admm is None:
-            max_it = self.max_it
+            max_it, tol = self.max_it, self.tol
+            task_name, svr_c = self.task, self.svr_c
 
-            def _run(fac_, ys_, c_upper_, z0, mu0):
-                state, trace = admm_mod.admm_svm_batched(
-                    fac_.solve_mat, ys_, c_upper_, fac_.beta, max_it,
+            def _run(fac_, ys_, pmask_, knob, z0, mu0):
+                if task_name == "svr":
+                    task = tasks_mod.svr_task(ys_, svr_c * pmask_, knob)
+                elif task_name == "oneclass":
+                    task = tasks_mod.one_class_task(pmask_, knob)
+                else:
+                    task = admm_mod.svm_task(ys_, knob * pmask_)
+                state, trace = admm_mod.admm_boxqp(
+                    fac_.solve_mat, task, fac_.beta, max_it, tol=tol,
                     z0=z0, mu0=mu0)
-                return state.z, state.mu, ys_.T * state.z, trace.primal_res
+                # only the oneclass rho extraction needs the box bounds —
+                # skip materializing the (d, P) hi block everywhere else
+                hi = task.hi if task_name == "oneclass" else ()
+                return (state.z, state.mu, task.sign * state.z, hi,
+                        trace.iters_run)
 
             self._jit_admm = jax.jit(_run)
-            self._jit_bias = jax.jit(compute_bias_batched)
+            if task_name == "svr":
+                self._jit_bias = jax.jit(tasks_mod.compute_bias_svr_batched)
+            elif task_name == "oneclass":
+                self._jit_bias = jax.jit(tasks_mod.compute_rho_oneclass_batched)
+            else:
+                self._jit_bias = jax.jit(compute_bias_batched)
 
         if self._mesh is None:
             zeros = jnp.zeros((d, n_prob), jnp.float32)
@@ -322,30 +398,40 @@ class HSSSVMEngine:
                 NamedSharding(self._mesh, PartitionSpec(
                     tuple(self._mesh.axis_names), None)))
         z0, mu0 = (zeros, zeros) if warm is None else warm
+        knob = jnp.asarray(c_value, jnp.float32)
 
         with self._active():
             t0 = time.perf_counter()
-            z, mu, z_y, _res = self._jit_admm(
-                fac, ys, c_value * pmask, z0, mu0)
+            z, mu, z_y, hi_mat, iters_run = self._jit_admm(
+                fac, ys, pmask, knob, z0, mu0)
             jax.block_until_ready(z)
             t1 = time.perf_counter()
-            biases = self._jit_bias(
-                self._hss, ys.T, z, c_value * pmask.T, pmask.T)
+            if self.task == "svr":
+                biases = self._jit_bias(
+                    self._hss, ys.T, z, self.svr_c * pmask.T, pmask.T, knob)
+            elif self.task == "oneclass":
+                biases = -self._jit_bias(self._hss, z, hi_mat, pmask.T)
+            else:
+                biases = self._jit_bias(
+                    self._hss, ys.T, z, c_value * pmask.T, pmask.T)
         if self._report is not None:
             self._report.admm_s += t1 - t0
+            self._report.iters_run = tuple(
+                int(i) for i in np.asarray(iters_run))
 
         model = EngineModel(
             x_perm=self._hss.x, z_y=z_y, biases=biases,
             classes=self._classes, spec=self.spec, c_value=c_value,
-            binary=self._binary, strategy=self.strategy, pairs=self._pairs,
-            mesh=self._mesh,
+            binary=self._binary, strategy=self.strategy, task=self.task,
+            pairs=self._pairs, mesh=self._mesh,
         )
         return model, (z, mu)
 
     # ------------------------------------------------------------------ #
     def train_grid(self, c_values: Sequence[float], warm_start: bool = True
                    ) -> list[EngineModel]:
-        """Warm-started C sweep reusing the one compression+factorization."""
+        """Warm-started knob sweep (C / ε / ν) reusing the one
+        compression+factorization."""
         warm = None
         models = []
         for c in c_values:
@@ -355,8 +441,8 @@ class HSSSVMEngine:
             models.append(model)
         return models
 
-    def fit(self, x: np.ndarray, y: np.ndarray, c_value: float = 1.0
-            ) -> EngineModel:
+    def fit(self, x: np.ndarray, y: np.ndarray | None = None,
+            c_value: float = 1.0) -> EngineModel:
         self.prepare(x, y)
         model, _ = self.train(c_value)
         return model

@@ -76,6 +76,9 @@ class FitReport:
     rank_sum_pre: int | None = None
     rank_sum_post: int | None = None
     kernel_evals: int | None = None
+    # per-problem ADMM iterations actually run by the last train() — below
+    # max_it when the residual stopping rule (``tol``) froze the iterates
+    iters_run: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -89,6 +92,7 @@ class HSSSVMTrainer:
     leaf_size: int = 128
     beta: float | None = None     # default: the paper's rule by dataset size
     max_it: int = 10
+    tol: float | None = None      # ADMM residual early-stop (paper's rule)
 
     # populated by prepare():
     _hss: HSSMatrix | None = None
@@ -145,17 +149,17 @@ class HSSSVMTrainer:
         c_vec = c_value * mask           # pads pinned to [0, 0]
 
         if self._jit_admm is None:
-            max_it = self.max_it
+            max_it, tol = self.max_it, self.tol
 
             def _run(fac_, y_, c_vec_, z0, mu0):
                 return admm_mod.admm_svm(fac_.solve, y_, c_vec_, fac_.beta,
-                                         max_it, z0=z0, mu0=mu0)
+                                         max_it, z0=z0, mu0=mu0, tol=tol)
 
             self._jit_admm = jax.jit(_run)
 
         zeros = jnp.zeros_like(y)
         t0 = time.perf_counter()
-        state, _trace = self._jit_admm(
+        state, trace = self._jit_admm(
             fac, y, c_vec,
             zeros if warm is None else warm[0],
             zeros if warm is None else warm[1],
@@ -164,6 +168,7 @@ class HSSSVMTrainer:
         t1 = time.perf_counter()
         if self._report is not None:
             self._report.admm_s += t1 - t0
+            self._report.iters_run = (int(trace.iters_run),)
 
         bias = compute_bias(self._hss, y, z, c_value, mask)
         model = SVMModel(
@@ -226,17 +231,23 @@ def run_grid_search(
     y_val: np.ndarray,
     hs: Sequence[float],
     cs: Sequence[float],
+    score_fn=None,
 ) -> tuple[object, dict]:
-    """Generic (h, C) grid driver shared by the binary and multiclass sweeps.
+    """Generic (h, knob) grid driver shared by every box-QP task sweep.
 
     Per h: ONE trainer (= one compression + one factorization via prepare);
-    the C sweep reuses them (the paper's headline amortization) and
-    warm-starts consecutive C values.  ``make_trainer(h)`` builds the
-    trainer; returns the best model by validation accuracy + a results table.
+    the knob sweep — C for classification, ε for SVR, ν for one-class —
+    reuses them (the paper's headline amortization) and warm-starts
+    consecutive values.  ``make_trainer(h)`` builds the trainer; the best
+    model is picked by ``score_fn(model, x_val, y_val)`` (higher is better;
+    default: classification accuracy).  Returns it + a results table whose
+    ``accuracy`` entries hold the score.
     """
-    y_val = jnp.asarray(y_val)
+    if score_fn is None:
+        def score_fn(model, x_v, y_v):
+            return float(jnp.mean(model.predict(x_v) == jnp.asarray(y_v)))
     results = {}
-    best = (None, -1.0, None, None)
+    best = (None, -np.inf, None, None)
     for h in hs:
         trainer = make_trainer(float(h))
         trainer.prepare(x, y)
@@ -244,7 +255,7 @@ def run_grid_search(
         admm_seen = 0.0
         for c in cs:
             model, warm = trainer.train(float(c), warm=warm)
-            acc = float(jnp.mean(model.predict(jnp.asarray(x_val)) == y_val))
+            acc = score_fn(model, jnp.asarray(x_val), y_val)
             # report.admm_s accumulates across the warm-started C sweep;
             # each cell records only its own run's time
             admm_total = trainer.report.admm_s

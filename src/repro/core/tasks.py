@@ -1,0 +1,229 @@
+"""ε-SVR and one-class SVM as thin BoxQPTask specs on the shared K_β⁻¹.
+
+The shifted kernel K̃ + βI depends only on the data, the bandwidth h, and β —
+never on the task.  Related work (semismooth-Newton and augmented-Lagrangian
+kernel-machine solvers) treats kernel SVC, ε-SVR, and one-class/novelty
+detection as instances of one box-QP family; this module supplies the two
+non-classification members on the exact same HSS compression + factorization
+the SVM path uses (see repro.core.admm for the generic solver and
+repro.core.engine for the orchestration):
+
+  ε-SVR (difference-form dual, variables α = α⁺ − α⁻ ∈ R^d):
+      min ½ αᵀKα − yᵀα + ε‖α‖₁   s.t. eᵀα = 0,  α ∈ [−C, C]^d
+    The ℓ1 term — which makes the 2d-variable form a QP — is handled
+    exactly by the ADMM z-step's soft-threshold prox, so the d-dimensional
+    difference form rides K_β⁻¹ directly: ONE multi-RHS solve per
+    iteration, same as classification.  Prediction is f(x) = Σ αᵢ K(xᵢ, x)
+    + b with b recovered from the margin support vectors (|αᵢ| strictly
+    inside (0, C): y_i − f(x_i) = ε·sign(αᵢ)).
+
+  one-class SVM (Schölkopf ν-parameterization):
+      min ½ αᵀKα   s.t. eᵀα = 1,  α ∈ [0, 1/(νn)]^d
+    ν bounds the outlier fraction; the offset ρ = (Kα)ᵢ on the margin
+    support vectors (0 < αᵢ < 1/(νn)), and f(x) = Σ αᵢ K(xᵢ, x) − ρ is
+    ≥ 0 on the estimated support of the data.
+
+Both bias extractions cost ONE HSS matmat (paper eq. (7)'s trick applied to
+the new tasks) and are batched over problem columns like compute_bias_batched.
+Padded points (tree.pad_dataset) are pinned to the [0, 0] box through the
+participation mask exactly as in classification, so the restriction of the
+ADMM fixed point to real points solves the original problem.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.admm import BoxQPTask, box_matrix
+from repro.core.hss import HSSMatrix
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------- #
+# task builders                                                         #
+# --------------------------------------------------------------------- #
+def svr_task(targets: Array, c_box: Array | float, epsilon: Array | float
+             ) -> BoxQPTask:
+    """ε-SVR difference-form dual for k regression problems.
+
+    ``targets`` is (k, d) (or (d,)) response vectors; ``c_box`` a scalar or
+    (k, d) per-coordinate bound — pass C·mask so padded points get the
+    inert [0, 0] box; ``epsilon`` the tube half-width (scalar or (k,)).
+    """
+    t = jnp.atleast_2d(jnp.asarray(targets))            # (k, d)
+    k, d = t.shape
+    dtype = t.dtype
+    c_mat = box_matrix(c_box, d, k, dtype)
+    return BoxQPTask(
+        sign=jnp.ones((d, k), dtype),
+        lin=-t.T,
+        lo=-c_mat,
+        hi=c_mat,
+        eq_sa=jnp.ones((d,), dtype),
+        eq_b=None,
+        l1=jnp.broadcast_to(jnp.asarray(epsilon, dtype), (k,)),
+    )
+
+
+def one_class_task(mask: Array, nu: Array | float) -> BoxQPTask:
+    """Schölkopf ν one-class SVM for k problems.
+
+    ``mask`` is (k, d) (or (d,)) participation masks (1 real, 0 pad): the
+    box upper bound is mask/(ν·n_real) so pads are pinned to [0, 0] and the
+    feasible mass eᵀα = 1 lives on real points (1/ν ≥ 1 of box headroom).
+    """
+    m = jnp.atleast_2d(jnp.asarray(mask))               # (k, d)
+    k, d = m.shape
+    dtype = m.dtype
+    n_real = jnp.sum(m, axis=1)                         # (k,)
+    nu_arr = jnp.broadcast_to(jnp.asarray(nu, dtype), (k,))
+    hi = m.T / (nu_arr * n_real)[None, :]               # (d, k); pads -> 0
+    return BoxQPTask(
+        sign=jnp.ones((d, k), dtype),
+        lin=jnp.zeros((d, k), dtype),
+        lo=jnp.zeros((d, k), dtype),
+        hi=hi,
+        eq_sa=jnp.ones((d,), dtype),
+        eq_b=jnp.ones((k,), dtype),
+        l1=None,
+    )
+
+
+# --------------------------------------------------------------------- #
+# bias / offset extraction (one HSS matmat each, batched over columns)  #
+# --------------------------------------------------------------------- #
+def compute_bias_svr_batched(hss: HSSMatrix, targets: Array, alpha: Array,
+                             c_mat: Array, masks: Array,
+                             epsilon: Array | float,
+                             margin_rel: float = 1e-4) -> Array:
+    """SVR bias from the margin SVs, with ONE HSS matmat for all P problems.
+
+    For margin support vectors (0 < |αᵢ| < C strictly) the KKT conditions
+    give yᵢ − (Kα)ᵢ − b = ε·sign(αᵢ), so b averages yᵢ − (Kα)ᵢ − ε·sign(αᵢ)
+    over them.  Falls back to all support vectors, then to all real points
+    (ε term dropped — the unbiased residual mean).  All column blocks are
+    (d, P); returns (P,).
+    """
+    k_alpha = hss.matmat(alpha)                         # K̃ α, one O(N r) sweep
+    absa = jnp.abs(alpha)
+    tol = margin_rel * c_mat
+    resid = targets - k_alpha - epsilon * jnp.sign(alpha)
+    on_margin = ((absa > tol) & (absa < c_mat - tol)
+                 & (masks > 0)).astype(alpha.dtype)
+    n_m = jnp.sum(on_margin, axis=0)
+    b_margin = jnp.einsum("dp,dp->p", on_margin, resid) / jnp.maximum(n_m, 1.0)
+    sv = ((absa > tol) & (masks > 0)).astype(alpha.dtype)
+    n_sv = jnp.sum(sv, axis=0)
+    b_sv = jnp.einsum("dp,dp->p", sv, resid) / jnp.maximum(n_sv, 1.0)
+    b_all = (jnp.einsum("dp,dp->p", masks, targets - k_alpha)
+             / jnp.maximum(jnp.sum(masks, axis=0), 1.0))
+    return jnp.where(n_m > 0, b_margin, jnp.where(n_sv > 0, b_sv, b_all))
+
+
+def compute_rho_oneclass_batched(hss: HSSMatrix, alpha: Array, hi_mat: Array,
+                                 masks: Array, margin_rel: float = 1e-3
+                                 ) -> Array:
+    """One-class offset ρ = (K̃α)ᵢ averaged over margin SVs (0 < αᵢ < 1/(νn)).
+
+    Falls back to all support vectors when every SV sits at the bound.  The
+    decision function is f(x) = Σ αᵢ K(xᵢ, x) − ρ (≥ 0 inside the estimated
+    support), i.e. the model bias is −ρ.  Blocks are (d, P); returns (P,).
+    """
+    k_alpha = hss.matmat(alpha)
+    tol = margin_rel * hi_mat
+    on_margin = ((alpha > tol) & (alpha < hi_mat - tol)
+                 & (masks > 0)).astype(alpha.dtype)
+    n_m = jnp.sum(on_margin, axis=0)
+    rho_margin = (jnp.einsum("dp,dp->p", on_margin, k_alpha)
+                  / jnp.maximum(n_m, 1.0))
+    sv = ((alpha > tol) & (masks > 0)).astype(alpha.dtype)
+    n_sv = jnp.maximum(jnp.sum(sv, axis=0), 1.0)
+    rho_sv = jnp.einsum("dp,dp->p", sv, k_alpha) / n_sv
+    return jnp.where(n_m > 0, rho_margin, rho_sv)
+
+
+# --------------------------------------------------------------------- #
+# validation metrics + grid drivers (ε / ν sweeps in place of C)        #
+# --------------------------------------------------------------------- #
+def svr_score(model, x_val: Array, y_val: Array) -> float:
+    """Negated RMSE (higher is better, run_grid_search maximizes)."""
+    pred = model.predict(x_val)
+    return -float(jnp.sqrt(jnp.mean((pred - jnp.asarray(y_val)) ** 2)))
+
+
+def oneclass_metrics(pred, y_true) -> dict:
+    """Outlier-detection metrics from ±1 predictions vs ±1 ground truth:
+    precision/recall of the outlier (−1) class and balanced accuracy.
+    The ONE home of the flagged/precision/recall arithmetic — bench, serve
+    and the examples all report from here so the numbers cannot diverge."""
+    pred = np.asarray(pred)
+    y_true = np.asarray(y_true)
+    flagged = pred < 0
+    out = y_true < 0
+    precision = float((flagged & out).sum() / max(flagged.sum(), 1))
+    recall = float((flagged & out).sum() / max(out.sum(), 1))
+    r_in = float((~flagged & ~out).sum() / max((~out).sum(), 1))
+    return dict(precision=precision, recall=recall,
+                balanced_accuracy=0.5 * (recall + r_in))
+
+
+def oneclass_score(model, x_val: Array, y_val: Array) -> float:
+    """Balanced accuracy of inlier(+1)/outlier(−1) detection."""
+    return oneclass_metrics(model.predict(x_val), y_val)["balanced_accuracy"]
+
+
+def grid_search_svr(
+    x: np.ndarray,
+    y: np.ndarray,
+    x_val: np.ndarray,
+    y_val: np.ndarray,
+    hs: Sequence[float],
+    epsilons: Sequence[float],
+    c_value: float = 1.0,
+    trainer_kwargs: dict | None = None,
+    rtol: float | None = None,
+) -> tuple[object, dict]:
+    """(h, ε) grid for ε-SVR — ε sweeps in place of C (paper §3.3 pattern).
+
+    Per h: ONE compression + ONE factorization serve the whole warm-started
+    ε sweep (the task's linear term and prox threshold change, the kernel
+    side never does).  Scores are negated validation RMSE.
+    """
+    from repro.core.engine import HSSSVMEngine
+    from repro.core.kernelfn import KernelSpec
+    from repro.core.svm import resolve_rtol, run_grid_search
+
+    kw = resolve_rtol(trainer_kwargs, rtol)
+    return run_grid_search(
+        lambda h: HSSSVMEngine(spec=KernelSpec(h=h), task="svr",
+                               svr_c=c_value, **kw),
+        x, y, x_val, y_val, hs, epsilons, score_fn=svr_score)
+
+
+def grid_search_oneclass(
+    x: np.ndarray,
+    x_val: np.ndarray,
+    y_val: np.ndarray,
+    hs: Sequence[float],
+    nus: Sequence[float],
+    trainer_kwargs: dict | None = None,
+    rtol: float | None = None,
+) -> tuple[object, dict]:
+    """(h, ν) grid for one-class SVM — ν sweeps in place of C.
+
+    Training is unsupervised (no y); ``y_val`` holds ±1 inlier/outlier
+    labels scored by balanced accuracy.  Per h: one compression + one
+    factorization for the whole warm-started ν sweep.
+    """
+    from repro.core.engine import HSSSVMEngine
+    from repro.core.kernelfn import KernelSpec
+    from repro.core.svm import resolve_rtol, run_grid_search
+
+    kw = resolve_rtol(trainer_kwargs, rtol)
+    return run_grid_search(
+        lambda h: HSSSVMEngine(spec=KernelSpec(h=h), task="oneclass", **kw),
+        x, None, x_val, y_val, hs, nus, score_fn=oneclass_score)

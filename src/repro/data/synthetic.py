@@ -113,6 +113,59 @@ def spirals(n: int, n_classes: int = 3, n_features: int = 2,
     return x[p], y[p]
 
 
+def noisy_sine(n: int, n_features: int = 2, freq: float = 1.5,
+               noise: float = 0.1, seed: int = 0):
+    """Regression targets y = sin(freq·x₀) + ½·cos(freq·x₁) + noise.
+
+    The ε-SVR workhorse: a smooth low-dimensional response over uniformly
+    scattered points — the regime where the Gaussian-kernel HSS compression
+    is near-exact and the ε tube directly controls the SV count.
+    """
+    r = np.random.default_rng(seed)
+    x = r.uniform(-np.pi, np.pi, size=(n, n_features)).astype(np.float32)
+    y = np.sin(freq * x[:, 0])
+    if n_features > 1:
+        y = y + 0.5 * np.cos(freq * x[:, 1])
+    y = (y + noise * r.normal(size=n)).astype(np.float32)
+    return x, y
+
+
+def noisy_step(n: int, n_features: int = 2, levels: int = 4,
+               noise: float = 0.05, seed: int = 0):
+    """Regression targets: a staircase of ``levels`` flat plateaus + noise.
+
+    Discontinuous response — hard for a smooth kernel, so it exercises the
+    bias fallbacks and the ε/RMSE trade-off away from the easy-sine regime.
+    """
+    r = np.random.default_rng(seed)
+    x = r.uniform(0.0, 1.0, size=(n, n_features)).astype(np.float32)
+    y = np.floor(x[:, 0] * levels) / max(levels - 1, 1)
+    y = (y + noise * r.normal(size=n)).astype(np.float32)
+    return x, y
+
+
+def blobs_with_outliers(n: int, n_features: int = 4, outlier_frac: float = 0.1,
+                        spread: float = 6.0, seed: int = 0):
+    """One-class novelty-detection set: a Gaussian inlier blob (y = +1) plus
+    a uniform shell of far-away outliers (y = −1, fraction ``outlier_frac``).
+
+    Training a one-class SVM uses x only; y is the held-out ground truth for
+    precision/recall scoring.
+    """
+    r = np.random.default_rng(seed)
+    n_out = max(int(n * outlier_frac), 1)
+    n_in = n - n_out
+    x_in = r.normal(size=(n_in, n_features))
+    u = r.normal(size=(n_out, n_features))
+    u /= np.maximum(np.linalg.norm(u, axis=1, keepdims=True), 1e-9)
+    radii = r.uniform(0.6 * spread, spread, size=(n_out, 1))
+    x_out = u * radii + 0.3 * r.normal(size=(n_out, n_features))
+    x = np.concatenate([x_in, x_out]).astype(np.float32)
+    y = np.concatenate([np.ones(n_in), -np.ones(n_out)]).astype(np.float32)
+    p = r.permutation(n)
+    return x[p], y[p]
+
+
 DATASETS = {
     "blobs": blobs,
     "circles": circles,
@@ -125,8 +178,18 @@ MULTICLASS_DATASETS = {
     "spirals": spirals,
 }
 
+REGRESSION_DATASETS = {
+    "noisy_sine": noisy_sine,
+    "noisy_step": noisy_step,
+}
+
+ONECLASS_DATASETS = {
+    "blobs_with_outliers": blobs_with_outliers,
+}
+
 
 def train_test(name: str, n_train: int, n_test: int, seed: int = 0, **kw):
-    gen = DATASETS.get(name) or MULTICLASS_DATASETS[name]
+    gen = (DATASETS.get(name) or MULTICLASS_DATASETS.get(name)
+           or REGRESSION_DATASETS.get(name) or ONECLASS_DATASETS[name])
     x, y = gen(n_train + n_test, seed=seed, **kw)
     return x[:n_train], y[:n_train], x[n_train:], y[n_train:]

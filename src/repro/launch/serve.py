@@ -1,4 +1,4 @@
-"""Serving driver: batched LM prefill+decode, or multiclass SVM scoring.
+"""Serving driver: batched LM prefill+decode, or kernel box-QP scoring.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --preset tiny \
       --batch 4 --prompt-len 32 --gen 16
@@ -6,12 +6,18 @@
   PYTHONPATH=src python -m repro.launch.serve --task svm \
       --svm-classes 4 --svm-train 8192 --batch 256 --requests 50
 
-The SVM path trains a k-class model on ONE shared HSS factorization via
-the unified engine (repro.core.engine.HSSSVMEngine; pass --svm-mesh to
-build and serve sharded over all local devices), then serves score/predict
+  PYTHONPATH=src python -m repro.launch.serve --task svr --batch 256
+  PYTHONPATH=src python -m repro.launch.serve --task oneclass --batch 256
+
+The kernel paths train their model on ONE shared HSS factorization via the
+unified engine (repro.core.engine.HSSSVMEngine; pass --svm-mesh to build
+and serve sharded over all local devices), then serve score/predict
 requests with the streamed block-kernel evaluator — each request batch
-costs one pass over the support set for ALL k classes, and under a mesh
-each device scores only its local support shard (one psum per batch).
+costs one pass over the support set, and under a mesh each device scores
+only its local support shard (one psum per batch).  ``--task svm`` is
+k-class classification; ``--task svr`` serves ε-SVR regression values on
+the noisy-sine generator; ``--task oneclass`` serves ν one-class novelty
+scores on blobs-with-outliers (the knobs are --svm-eps / --svm-nu).
 """
 from __future__ import annotations
 
@@ -78,10 +84,26 @@ def serve_svm(args) -> None:
     from repro.core.kernelfn import KernelSpec
     from repro.data import synthetic
 
-    xtr, ytr, xte, yte = synthetic.train_test(
-        "multiclass_blobs", n_train=args.svm_train,
-        n_test=max(args.batch, 512), seed=0,
-        n_classes=args.svm_classes, sep=3.0)
+    task = args.task
+    n_test = max(args.batch, 512)
+    # --svm-h default is task-appropriate for the built-in demo dataset;
+    # an explicit value always wins.
+    if task == "svr":
+        xtr, ytr, xte, yte = synthetic.train_test(
+            "noisy_sine", n_train=args.svm_train, n_test=n_test, seed=0,
+            noise=0.1)
+        knob, h = args.svm_eps, 1.0 if args.svm_h is None else args.svm_h
+    elif task == "oneclass":
+        xtr, ytr = synthetic.blobs_with_outliers(
+            args.svm_train, n_features=4, outlier_frac=0.1, seed=0)
+        xte, yte = synthetic.blobs_with_outliers(
+            n_test, n_features=4, outlier_frac=0.1, seed=1)
+        knob, h = args.svm_nu, 2.0 if args.svm_h is None else args.svm_h
+    else:
+        xtr, ytr, xte, yte = synthetic.train_test(
+            "multiclass_blobs", n_train=args.svm_train, n_test=n_test,
+            seed=0, n_classes=args.svm_classes, sep=3.0)
+        knob, h = args.svm_c, 1.5 if args.svm_h is None else args.svm_h
 
     mesh = None
     if args.svm_mesh and jax.device_count() > 1:
@@ -90,25 +112,49 @@ def serve_svm(args) -> None:
 
     t0 = time.time()
     engine = HSSSVMEngine(
-        spec=KernelSpec(h=args.svm_h),
+        spec=KernelSpec(h=h),
         comp=CompressionParams(rank=32, n_near=48, n_far=64),
-        leaf_size=256, max_it=10, mesh=mesh)
-    model = engine.fit(xtr, ytr, c_value=args.svm_c)
+        leaf_size=256, max_it=30 if task == "oneclass" else 10,
+        mesh=mesh, task=task, svr_c=args.svm_c)
+    model = engine.fit(xtr, None if task == "oneclass" else ytr,
+                       c_value=knob)
     t_train = time.time() - t0
-    acc = float(jnp.mean(model.predict(jnp.asarray(xte)) == jnp.asarray(yte)))
+    pred = model.predict(jnp.asarray(xte))
+    if task == "svr":
+        quality = (f"holdout rmse "
+                   f"{float(jnp.sqrt(jnp.mean((pred - yte) ** 2))):.4f}")
+        head = f"ε-SVR (ε={knob})"
+    elif task == "oneclass":
+        from repro.core.tasks import oneclass_metrics
+
+        m = oneclass_metrics(pred, yte)
+        quality = (f"outlier precision {m['precision']:.3f} / recall "
+                   f"{m['recall']:.3f}")
+        head = f"one-class SVM (ν={knob})"
+    else:
+        acc = float(jnp.mean(pred == jnp.asarray(yte)))
+        quality = f"holdout acc {acc:.4f}"
+        head = f"{args.svm_classes}-class SVM (C={knob})"
     rep = engine.report
-    print(f"trained {args.svm_classes}-class model on {args.svm_train} pts "
+    print(f"trained {head} on {args.svm_train} pts "
           f"in {t_train:.1f}s (compress {rep.compression_s:.1f}s / factor "
           f"{rep.factorization_s:.2f}s / batched ADMM {rep.admm_s:.2f}s), "
-          f"holdout acc {acc:.4f}")
+          f"{quality}")
 
     # Request loop: jit once on the fixed batch shape, then measure latency.
-    classes = jnp.asarray(model.classes)
+    if task == "svm":
+        classes = jnp.asarray(model.classes)
 
-    @jax.jit
-    def score(xb):
-        s = model.decision_function(xb, block=args.batch)
-        return s, classes[jnp.argmax(s, axis=1)]
+        @jax.jit
+        def score(xb):
+            s = model.decision_function(xb, block=args.batch)
+            return s, classes[jnp.argmax(s, axis=1)]
+    else:
+        @jax.jit
+        def score(xb):
+            s = model.decision_function(xb, block=args.batch)
+            # svr: s IS the prediction; oneclass: sign flags outliers
+            return s, (s if task == "svr" else jnp.where(s >= 0, 1, -1))
 
     rng = np.random.default_rng(1)
     warm = jnp.asarray(xte[: args.batch])
@@ -125,15 +171,19 @@ def serve_svm(args) -> None:
     t_serve = time.time() - t_serve
     lat_ms = np.sort(np.array(lat)) * 1e3
     qps = args.requests * args.batch / max(t_serve, 1e-9)
+    per_pass = (f"{args.svm_classes} classes" if task == "svm"
+                else {"svr": "regression values",
+                      "oneclass": "novelty scores"}[task])
     print(f"served {args.requests} requests x batch {args.batch}: "
           f"{qps:.0f} points/s, latency p50 {lat_ms[len(lat_ms)//2]:.2f}ms "
           f"p95 {lat_ms[int(len(lat_ms)*0.95)-1]:.2f}ms "
-          f"({args.svm_classes} classes per pass)")
+          f"({per_pass} per pass)")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--task", default="lm", choices=["lm", "svm"])
+    ap.add_argument("--task", default="lm",
+                    choices=["lm", "svm", "svr", "oneclass"])
     ap.add_argument("--arch", default=None, help="LM arch (required for lm)")
     ap.add_argument("--preset", default="tiny", choices=["tiny", "full"])
     ap.add_argument("--batch", type=int, default=4)
@@ -142,14 +192,21 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=20)
     ap.add_argument("--svm-classes", type=int, default=4)
     ap.add_argument("--svm-train", type=int, default=8192)
-    ap.add_argument("--svm-h", type=float, default=1.5)
-    ap.add_argument("--svm-c", type=float, default=1.0)
+    ap.add_argument("--svm-h", type=float, default=None,
+                    help="kernel bandwidth (default: per-task demo value "
+                         "1.5 svm / 1.0 svr / 2.0 oneclass)")
+    ap.add_argument("--svm-c", type=float, default=1.0,
+                    help="C (svm); the SVR box bound (svr)")
+    ap.add_argument("--svm-eps", type=float, default=0.1,
+                    help="ε tube half-width (task svr)")
+    ap.add_argument("--svm-nu", type=float, default=0.1,
+                    help="ν outlier-fraction bound (task oneclass)")
     ap.add_argument("--svm-mesh", action="store_true",
                     help="mesh-parallel HSS build/serve over all local "
                          "devices (core.engine.HSSSVMEngine)")
     args = ap.parse_args()
 
-    if args.task == "svm":
+    if args.task in ("svm", "svr", "oneclass"):
         serve_svm(args)
     else:
         if args.arch is None:

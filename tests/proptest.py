@@ -42,3 +42,79 @@ def arrays(shape_fn, scale=1.0, dtype=np.float32):
         shape = shape_fn(rng) if callable(shape_fn) else shape_fn
         return (rng.normal(size=shape) * scale).astype(dtype)
     return gen
+
+
+def dense_solver_mat(k_mat, beta):
+    """(K + βI)^{-1} multi-RHS solver via dense Cholesky — the exact-solve
+    reference the ADMM/KKT tiers share (tests/test_property.py,
+    tests/test_tasks.py)."""
+    import jax.numpy as jnp
+    import jax.scipy.linalg as jsl
+
+    chol = jsl.cholesky(
+        k_mat + beta * jnp.eye(k_mat.shape[0], dtype=k_mat.dtype), lower=True)
+    return lambda b: jsl.cho_solve((chol, True), b)
+
+
+def kkt_residuals(k_mat, task, state) -> dict[str, np.ndarray]:
+    """Named KKT residuals of a BoxQPTask at an ADMM iterate (x, z, μ).
+
+    The problem is  min ½ xᵀSKSx + pᵀx + γ‖x‖₁  s.t. aᵀx = b, lo ≤ x ≤ hi
+    (repro.core.admm.BoxQPTask); the ADMM split multiplier is u = −μ.  At a
+    KKT point: ∇f(z) + λa + u = 0 with u ∈ γ∂‖z‖₁ + N_box(z).  Every task —
+    SVM, ε-SVR, one-class — is checked by the SAME residuals, all evaluated
+    in float64 from the float32 iterates:
+
+      stationarity — ‖∇f(z) + λ*a + u‖∞ / (1 + ‖∇f(z)‖∞) with λ* the
+                     least-squares equality multiplier (the u-orthogonality
+                     of the gradient, i.e. dual stationarity);
+      eq / box     — primal feasibility |aᵀz − b| and box violation;
+      split        — ‖x − z‖∞ (consensus between the two ADMM blocks);
+      comp_slack   — dual feasibility + complementary slackness via the
+                     prox fixed point: ‖z − Π_box(soft(z + u, γ))‖∞
+                     normalized by (1 + ‖u‖∞); zero iff u lies in the
+                     subdifferential γ∂‖z‖₁ + N_box(z) — at an interior
+                     coordinate this forces u_i = ∓γ (u_i = 0 for γ = 0,
+                     the classic free-SV condition) and at a bound it
+                     enforces the sign condition, so one residual covers
+                     every complementary-slackness case uniformly.
+
+    ``k_mat`` is the dense kernel the solver approximated (so residuals
+    measure ADMM optimality, not kernel-compression error).  Returns
+    per-problem (k,) arrays.
+    """
+    x = np.asarray(state.x, np.float64)
+    z = np.asarray(state.z, np.float64)
+    mu = np.asarray(state.mu, np.float64)
+    s = np.asarray(task.sign, np.float64)
+    p = np.asarray(task.lin, np.float64)
+    lo = np.broadcast_to(np.asarray(task.lo, np.float64), z.shape)
+    hi = np.broadcast_to(np.asarray(task.hi, np.float64), z.shape)
+    k_mat = np.asarray(k_mat, np.float64)
+    n_prob = z.shape[1]
+    gam = (np.zeros(n_prob) if task.l1 is None
+           else np.broadcast_to(np.asarray(task.l1, np.float64), (n_prob,)))
+
+    grad = s * (k_mat @ (s * z)) + p          # ∇(½ zᵀSKSz + pᵀz)
+    u = -mu                                   # the split multiplier
+    if task.eq_sa is not None:
+        sa = np.asarray(task.eq_sa, np.float64)
+        a = s * (sa[:, None] if sa.ndim == 1 else sa)
+        b = (np.zeros(n_prob) if task.eq_b is None
+             else np.asarray(task.eq_b, np.float64))
+        lam = -np.sum(a * (grad + u), axis=0) / np.sum(a * a, axis=0)
+        r_eq = np.abs(np.sum(a * z, axis=0) - b)
+        stat_vec = grad + lam[None, :] * a + u
+    else:
+        r_eq = np.zeros(n_prob)
+        stat_vec = grad + u
+    r_stat = np.abs(stat_vec).max(axis=0) / (1.0 + np.abs(grad).max(axis=0))
+    r_box = np.maximum(np.maximum(lo - z, 0.0),
+                       np.maximum(z - hi, 0.0)).max(axis=0)
+    r_split = np.abs(x - z).max(axis=0)
+    v = z + u
+    prox = np.clip(np.sign(v) * np.maximum(np.abs(v) - gam[None, :], 0.0),
+                   lo, hi)
+    r_cs = np.abs(z - prox).max(axis=0) / (1.0 + np.abs(u).max(axis=0))
+    return dict(stationarity=r_stat, eq=r_eq, box=r_box, split=r_split,
+                comp_slack=r_cs)

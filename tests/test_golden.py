@@ -2,10 +2,14 @@
 
 Solver refactors (solve sweeps, ADMM updates, compression sampling) must not
 silently regress convergence.  These pins were measured on the CPU backend
-at the time the multiclass subsystem landed, with deliberate margin:
+(binary/multiclass when the multiclass subsystem landed, SVR/one-class when
+the box-QP task layer landed), with deliberate margin:
 
   binary blobs  (n=1024, seed 0): acc 0.953, dual_res 30.3 -> 21.3 over 10 it
   4-class blobs (n=1024, seed 0): acc 0.949, primal_res[-1] < 0.012/class
+  SVR noisy sine (n=1024, seed 0, noise 0.1): rmse 0.0981 (the noise floor)
+  one-class blobs+outliers (n=1024, seed 0, ν=0.1): precision 0.758,
+    recall 0.980 on the seed-1 holdout
 
 A failure here means convergence behaviour changed — inspect the solver diff
 before touching the pins.
@@ -16,6 +20,7 @@ import pytest
 
 from repro.core import admm as admm_mod
 from repro.core.compression import CompressionParams
+from repro.core.engine import HSSSVMEngine
 from repro.core.kernelfn import KernelSpec
 from repro.core.multiclass import MulticlassHSSSVMTrainer
 from repro.core.svm import HSSSVMTrainer
@@ -64,3 +69,37 @@ def test_golden_multiclass_accuracy_and_residual_decay():
     assert np.all(primal[-1] < 0.05), primal[-1]  # measured <= 0.0113
     assert np.all(dual[-1] < 18.0), dual[-1]      # measured <= 14.58
     assert np.all(dual[-1] < dual[0]), (dual[0], dual[-1])
+
+
+def test_golden_svr_rmse_noisy_sine():
+    """ε-SVR on the engine must recover the sine to the noise floor."""
+    xtr, ytr, xte, yte = synthetic.train_test("noisy_sine", 1024, 256,
+                                              seed=0, noise=0.1)
+    engine = HSSSVMEngine(spec=KernelSpec(h=1.0), comp=COMP, leaf_size=128,
+                          max_it=30, task="svr", svr_c=2.0, beta=10.0)
+    engine.prepare(xtr, ytr)
+    model, _ = engine.train(0.1)
+    pred = np.asarray(model.predict(jnp.asarray(xte)))
+    rmse = float(np.sqrt(np.mean((pred - yte) ** 2)))
+    assert rmse < 0.12, rmse                      # measured 0.0981
+    # the ε tube keeps a sparse dual: most coefficients soft-thresholded out
+    sv_frac = float(np.mean(np.abs(np.asarray(model.z_y)) > 1e-5))
+    assert sv_frac < 0.8, sv_frac
+
+
+def test_golden_oneclass_precision_recall_blobs_with_outliers():
+    """ν one-class SVM must separate the planted outlier shell."""
+    xtr, _ = synthetic.blobs_with_outliers(1024, n_features=4,
+                                           outlier_frac=0.1, seed=0)
+    xte, yte = synthetic.blobs_with_outliers(512, n_features=4,
+                                             outlier_frac=0.1, seed=1)
+    engine = HSSSVMEngine(spec=KernelSpec(h=2.0), comp=COMP, leaf_size=128,
+                          max_it=30, task="oneclass")
+    engine.prepare(xtr)
+    model, _ = engine.train(0.1)
+    pred = np.asarray(model.predict(jnp.asarray(xte)))
+    flagged = pred < 0
+    precision = (flagged & (yte < 0)).sum() / max(flagged.sum(), 1)
+    recall = (flagged & (yte < 0)).sum() / max((yte < 0).sum(), 1)
+    assert precision >= 0.65, precision           # measured 0.758
+    assert recall >= 0.90, recall                 # measured 0.980

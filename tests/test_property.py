@@ -140,6 +140,138 @@ def test_property_hss_invariants_randomized_trees():
         assert hss.memory_bytes() < n * n * 4, case
 
 
+def _random_tree_kernel(case):
+    """Dense kernel reconstructed from an HSS build over a RANDOM tree —
+    the KKT checks then measure ADMM optimality against the exact kernel
+    the solver used, while still exercising randomized tree geometry."""
+    leaf, depth = case["leaf"], case["depth"]
+    n = leaf * 2 ** depth
+    rng = np.random.default_rng(case["data_seed"])
+    x = rng.normal(size=(n, 3)).astype(np.float32)
+    t = tree_mod.build_tree(x, leaf_size=leaf, levels=depth)
+    hss = compression.compress(
+        jnp.asarray(x[t.perm]), t, KernelSpec(h=case["h"]),
+        compression.CompressionParams(rank=16, n_near=24, n_far=32))
+    k_mat = np.asarray(hss.todense(), np.float64)
+    k_mat = 0.5 * (k_mat + k_mat.T)           # exact symmetry for the checks
+    return jnp.asarray(k_mat, jnp.float32), rng
+
+
+_TREE_SPEC = dict(
+    leaf=pt.choice(32, 64),
+    depth=pt.ints(1, 2),
+    h=pt.floats(0.8, 3.0, log=True),
+    beta=pt.floats(3.0, 30.0, log=True),
+    data_seed=pt.ints(0, 1000),
+    knob_seed=pt.ints(0, 1000),
+)
+
+# Residual bounds for the KKT tier: ADMM at 800 iterations on float32
+# iterates (measured worst case across the drawn cases: stationarity
+# 9.3e-3 — the slowest-converging residual at the large-β draws — eq
+# 4.4e-5, split 1.7e-5, comp_slack 1.5e-6; box is exact by construction
+# of the clip).  comp_slack is near-zero by construction of the z-step
+# (z IS a prox output) up to float32 rounding of the μ update.
+_KKT_TOL = dict(stationarity=2e-2, eq=1e-3, box=1e-6, split=2e-4,
+                comp_slack=1e-5)
+
+
+def _assert_kkt(k_mat, task, state, case, label):
+    res = pt.kkt_residuals(k_mat, task, state)
+    for name, bound in _KKT_TOL.items():
+        assert np.all(res[name] <= bound), (
+            label, name, res[name], case)
+
+
+def test_property_kkt_all_tasks_random_trees():
+    """The generic ADMM drives EVERY box-QP task to a KKT point: SVM, ε-SVR
+    and one-class verified by the same stationarity / feasibility /
+    complementary-slackness residuals over random trees and knobs."""
+    from repro.core import tasks as tasks_mod
+
+    for case in pt.Cases(n_cases=4, seed=11).draw(_TREE_SPEC):
+        k_mat, rng = _random_tree_kernel(case)
+        n = k_mat.shape[0]
+        beta = case["beta"]
+        solver = pt.dense_solver_mat(k_mat, beta)
+        krng = np.random.default_rng(case["knob_seed"])
+        c_val = float(krng.uniform(0.3, 3.0))
+
+        y = np.sign(krng.normal(size=n)).astype(np.float32)
+        svm = admm_mod.svm_task(jnp.asarray(y)[None, :], c_val)
+        state, _ = admm_mod.admm_boxqp(solver, svm, beta, max_it=800)
+        _assert_kkt(k_mat, svm, state, case, "svm")
+
+        targets = np.sin(2.0 * krng.normal(size=n)).astype(np.float32)
+        svr = tasks_mod.svr_task(jnp.asarray(targets)[None, :], c_val,
+                                 float(krng.uniform(0.02, 0.3)))
+        state, _ = admm_mod.admm_boxqp(solver, svr, beta, max_it=800)
+        _assert_kkt(k_mat, svr, state, case, "svr")
+
+        ocl = tasks_mod.one_class_task(jnp.ones((1, n), jnp.float32),
+                                       float(krng.uniform(0.05, 0.4)))
+        state, _ = admm_mod.admm_boxqp(solver, ocl, beta, max_it=800)
+        _assert_kkt(k_mat, ocl, state, case, "oneclass")
+
+
+def test_property_kkt_warm_equals_cold_fixed_point():
+    """Warm starts are an accelerator, not a different algorithm: for every
+    task the warm-started run must land on a KKT point of the NEW knob's
+    problem (the correctness contract of every knob-grid sweep)."""
+    from repro.core import tasks as tasks_mod
+
+    for case in pt.Cases(n_cases=3, seed=12).draw(_TREE_SPEC):
+        k_mat, _ = _random_tree_kernel(case)
+        n = k_mat.shape[0]
+        beta = case["beta"]
+        solver = pt.dense_solver_mat(k_mat, beta)
+        krng = np.random.default_rng(case["knob_seed"])
+        y = np.sign(krng.normal(size=n)).astype(np.float32)
+        targets = np.sin(2.0 * krng.normal(size=n)).astype(np.float32)
+        mask = jnp.ones((1, n), jnp.float32)
+
+        def build(task_name, knob):
+            if task_name == "svm":
+                return admm_mod.svm_task(jnp.asarray(y)[None, :], knob)
+            if task_name == "svr":
+                return tasks_mod.svr_task(
+                    jnp.asarray(targets)[None, :], 1.5, knob)
+            return tasks_mod.one_class_task(mask, knob)
+
+        for task_name, k0, k1 in (("svm", 0.5, 1.5), ("svr", 0.3, 0.08),
+                                  ("oneclass", 0.3, 0.12)):
+            t_first = build(task_name, k0)
+            s_first, _ = admm_mod.admm_boxqp(solver, t_first, beta,
+                                             max_it=800)
+            t_next = build(task_name, k1)
+            s_warm, _ = admm_mod.admm_boxqp(solver, t_next, beta, max_it=800,
+                                            z0=s_first.z, mu0=s_first.mu)
+            s_cold, _ = admm_mod.admm_boxqp(solver, t_next, beta, max_it=800)
+            _assert_kkt(k_mat, t_next, s_warm, case, f"{task_name}-warm")
+            _assert_kkt(k_mat, t_next, s_cold, case, f"{task_name}-cold")
+            # The dual QP is convex but not strictly so (PSD kernel): z may
+            # be non-unique, but the objective and the primal image K(Sz)
+            # ARE unique — compare those, not raw coordinates.
+            kn = np.asarray(k_mat, np.float64)
+
+            def objective(st):
+                z = np.asarray(st.z, np.float64)[:, 0]
+                s = np.asarray(t_next.sign, np.float64)[:, 0]
+                p = np.asarray(t_next.lin, np.float64)[:, 0]
+                gam = (0.0 if t_next.l1 is None
+                       else float(np.asarray(t_next.l1)[0]))
+                sz = s * z
+                return (0.5 * sz @ kn @ sz + p @ z
+                        + gam * np.abs(z).sum()), kn @ sz
+
+            f_w, ksz_w = objective(s_warm)
+            f_c, ksz_c = objective(s_cold)
+            assert abs(f_w - f_c) <= 1e-3 * (1.0 + abs(f_c)), (
+                task_name, f_w, f_c, case)
+            assert np.abs(ksz_w - ksz_c).max() <= 3e-2, (
+                task_name, np.abs(ksz_w - ksz_c).max(), case)
+
+
 def test_property_rope_norm_preserving():
     """RoPE is a rotation: per-head vector norms are invariant."""
     from repro.models.layers import apply_rope
