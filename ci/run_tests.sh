@@ -4,6 +4,12 @@
 # Default: the FAST tier — everything except tests marked `slow` (the
 # 8-emulated-device subprocess tests, see pytest.ini).  Pass --all for the
 # full suite (what the tier-1 verify `python -m pytest -x -q` runs).
+# Pass --lint for the static-analysis tier instead of pytest: runs
+#   python -m repro.analysis --check
+# (repro.analysis) — the AST lint rules over src/repro plus the
+# trace-level jaxpr checks (f32-accumulation, host callbacks, the
+# one-compile-per-C-sweep guard, and the mesh-placement check, which
+# uses the 8 emulated devices exported below).
 # Pass --bench for the benchmark smoke tier instead of pytest: runs the
 # JSON-emitting SVM benchmark (benchmarks/bench_svm.py --smoke) at toy
 # size, including the sharded-build case on the 8 emulated devices, and
@@ -27,15 +33,22 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 tier_args=(-m "not slow")
 pass_args=()
 bench=0
+lint=0
 for arg in "$@"; do
   if [[ "$arg" == "--all" ]]; then
     tier_args=()
   elif [[ "$arg" == "--bench" ]]; then
     bench=1
+  elif [[ "$arg" == "--lint" ]]; then
+    lint=1
   else
     pass_args+=("$arg")
   fi
 done
+
+if [[ "$lint" == 1 ]]; then
+  exec python -m repro.analysis --check ${pass_args[@]+"${pass_args[@]}"}
+fi
 
 if [[ "$bench" == 1 ]]; then
   ref="$(mktemp)"

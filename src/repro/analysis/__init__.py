@@ -1,0 +1,23 @@
+"""repro.analysis — static analysis for the HSS-ADMM codebase.
+
+Two layers guard the invariants the paper's wall-clock/accuracy claims
+rest on (see README "Static analysis"):
+
+  * Layer 1 (AST lint, :mod:`repro.analysis.lint` + ``rules/``): custom
+    syntax-level rules — f32 accumulation in hot-path contractions,
+    no host syncs inside traced code, the traced-scalar knob convention,
+    PRNG key discipline, no Python branches on tracers.
+  * Layer 2 (trace-level, :mod:`repro.analysis.jaxpr_check`):
+    ``jax.make_jaxpr`` over the real hot paths asserting no dtype
+    downcasts inside accumulation chains, no host callbacks, exactly one
+    compile across a warm-started C-grid sweep, and (under a mesh) that
+    every HSS factor's placement conforms to
+    ``repro.dist.api.node_partition_spec``.
+
+Run ``python -m repro.analysis --check`` for both layers; pre-existing,
+justified exceptions live in ``analysis/baseline.toml``.
+"""
+from repro.analysis.findings import Finding
+from repro.analysis.lint import lint_paths, repo_root
+
+__all__ = ["Finding", "lint_paths", "repo_root"]

@@ -1,0 +1,100 @@
+"""Layer 1 driver: discover files, run the AST rules, apply suppressions.
+
+Inline suppression syntax (on the flagged line or the line directly above):
+
+    kz = risky_einsum(...)   # lint: disable=precision-accumulate
+
+Multiple rules: ``# lint: disable=rule-a,rule-b``.  Repo-wide exceptions
+with a justification belong in ``analysis/baseline.toml`` instead
+(see repro.analysis.baseline).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterable, Sequence
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import ALL_RULES
+
+# default scan roots, repo-relative; benchmarks/examples are host-side
+# driver scripts with no traced hot paths
+DEFAULT_ROOTS = ("src/repro",)
+
+_DISABLE_RE = re.compile(r"#\s*lint:\s*disable=([\w,\- ]+)")
+
+
+def repo_root(start: str | None = None) -> str:
+    """Nearest ancestor containing a .git dir (or cwd as fallback)."""
+    cur = os.path.abspath(start or os.getcwd())
+    while True:
+        if os.path.isdir(os.path.join(cur, ".git")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return os.path.abspath(start or os.getcwd())
+        cur = parent
+
+
+def iter_python_files(roots: Iterable[str], base: str) -> list[str]:
+    out: list[str] = []
+    for root in roots:
+        abs_root = os.path.join(base, root)
+        if os.path.isfile(abs_root):
+            out.append(abs_root)
+            continue
+        for dirpath, dirnames, filenames in os.walk(abs_root):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            out.extend(os.path.join(dirpath, f)
+                       for f in sorted(filenames) if f.endswith(".py"))
+    return out
+
+
+def _disabled_rules(lines: list[str], lineno: int) -> set[str]:
+    rules: set[str] = set()
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = _DISABLE_RE.search(lines[ln - 1])
+            if m:
+                rules.update(r.strip() for r in m.group(1).split(","))
+    return rules
+
+
+def lint_file(abs_path: str, rel_path: str,
+              explicit: bool = False) -> list[Finding]:
+    """Run every applicable rule on one file."""
+    with open(abs_path, encoding="utf-8") as fh:
+        src = fh.read()
+    try:
+        tree = ast.parse(src, filename=rel_path)
+    except SyntaxError as exc:
+        return [Finding(rule="parse-error", path=rel_path,
+                        line=exc.lineno or 0,
+                        message=f"file does not parse: {exc.msg}",
+                        line_content="")]
+    lines = src.splitlines()
+    findings: list[Finding] = []
+    for rule in ALL_RULES:
+        if not explicit and not any(
+                rel_path.startswith(p) for p in rule.SCOPE):
+            continue
+        for f in rule.check(rel_path, tree, lines):
+            if f.rule in _disabled_rules(lines, f.line):
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def lint_paths(paths: Sequence[str] | None = None,
+               base: str | None = None) -> list[Finding]:
+    """Lint explicit ``paths`` (all rules) or the default roots (scoped)."""
+    base = base or repo_root()
+    explicit = bool(paths)
+    roots = paths or DEFAULT_ROOTS
+    findings: list[Finding] = []
+    for abs_path in iter_python_files(roots, base):
+        rel = os.path.relpath(abs_path, base).replace(os.sep, "/")
+        findings.extend(lint_file(abs_path, rel, explicit=explicit))
+    return findings

@@ -1,0 +1,237 @@
+"""Shared AST helpers for the lint rules.
+
+Everything here is deliberately module-local and syntactic: the rules never
+import the code under analysis, so the lint runs in milliseconds and cannot
+be broken by import-time side effects.  The trace-level layer
+(repro.analysis.jaxpr_check) is where whole-program facts are checked.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+# jax transforms whose function argument(s) get TRACED — a function handed
+# to any of these (or decorated with one) must contain no host syncs and no
+# Python control flow on traced values.  Maps transform name -> positions of
+# the traced-callable arguments.
+TRACED_CALL_ARGS: dict[str, tuple[int, ...]] = {
+    "jit": (0,),
+    "vmap": (0,),
+    "pmap": (0,),
+    "grad": (0,),
+    "value_and_grad": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+    "shard_map": (0,),
+    "scan": (0,),          # jax.lax.scan(body, ...)
+    "map": (0,),           # jax.lax.map(body, ...)
+    "fori_loop": (2,),     # jax.lax.fori_loop(lo, hi, body, init)
+    "while_loop": (0, 1),  # cond_fun, body_fun
+    "cond": (1, 2),        # pred, true_fun, false_fun
+    "switch": None,        # index, *branches — every arg past 0 is a callable
+}
+
+# decorators that make the decorated function a traced body
+TRACED_DECORATORS = {"jit", "vmap", "pmap", "grad", "value_and_grad",
+                     "checkpoint", "remat", "shard_map"}
+
+# control-flow names that only count when spelled through jax.lax — a bare
+# "map"/"scan"/"cond" otherwise collides with jax.tree.map, builtins.map,
+# itertools chains, etc.
+_LAX_ONLY = {"scan", "map", "fori_loop", "while_loop", "cond", "switch"}
+
+
+def attr_name(node: ast.AST) -> str | None:
+    """Trailing name of a Name / dotted Attribute: jax.lax.scan -> "scan"."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def root_name(node: ast.AST) -> str | None:
+    """Leading name of a dotted chain: jax.lax.scan -> "jax"."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def dotted_parts(node: ast.AST) -> tuple[str, ...]:
+    """All names of a dotted chain: jax.lax.scan -> ("jax", "lax", "scan")."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return tuple(reversed(parts))
+
+
+def is_partial_of(call: ast.Call, names: set[str]) -> bool:
+    """functools.partial(jax.jit, ...) / partial(shard_map, ...)."""
+    if attr_name(call.func) != "partial" or not call.args:
+        return False
+    return attr_name(call.args[0]) in names
+
+
+def iter_functions(tree: ast.AST) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            yield node
+
+
+def _callable_args(call: ast.Call) -> list[ast.AST]:
+    """The argument expressions of ``call`` that jax will trace."""
+    name = attr_name(call.func)
+    fn = call.func
+    # functools.partial(jax.jit, ...) produces a transform: its later
+    # application is out of local reach; but partial(jax.jit)(f) style is
+    # rare enough to ignore.
+    if name not in TRACED_CALL_ARGS:
+        if isinstance(fn, ast.Call) and is_partial_of(fn, set(TRACED_CALL_ARGS)):
+            return list(call.args)          # partial(jax.jit, ...)(f)
+        return []
+    if name in _LAX_ONLY and "lax" not in dotted_parts(fn):
+        return []
+    positions = TRACED_CALL_ARGS[name]
+    if positions is None:                   # lax.switch: all tail args
+        return list(call.args[1:])
+    return [call.args[i] for i in positions if i < len(call.args)]
+
+
+def traced_functions(tree: ast.AST) -> list[ast.AST]:
+    """Module-locally visible traced function bodies.
+
+    Collects (a) defs decorated with a jit-family transform, (b) defs whose
+    NAME is passed as the callable argument of a transform call in the same
+    module, and (c) lambdas appearing inline in those argument positions.
+    One module-local hop only — deliberately conservative, so the rule
+    never flags plain helpers that merely *could* be traced elsewhere.
+    """
+    defs_by_name: dict[str, list[ast.AST]] = {}
+    traced: list[ast.AST] = []
+    for fn in iter_functions(tree):
+        if isinstance(fn, ast.Lambda):
+            continue
+        defs_by_name.setdefault(fn.name, []).append(fn)
+        for dec in fn.decorator_list:
+            dname = attr_name(dec if not isinstance(dec, ast.Call)
+                              else dec.func)
+            if dname in TRACED_DECORATORS:
+                traced.append(fn)
+            elif isinstance(dec, ast.Call) and is_partial_of(
+                    dec, TRACED_DECORATORS):
+                traced.append(fn)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for arg in _callable_args(node):
+            if isinstance(arg, ast.Lambda):
+                traced.append(arg)
+            else:
+                name = attr_name(arg)
+                if name and name in defs_by_name:
+                    traced.extend(defs_by_name[name])
+    # dedupe, preserve order
+    seen: set[int] = set()
+    out = []
+    for fn in traced:
+        if id(fn) not in seen:
+            seen.add(id(fn))
+            out.append(fn)
+    return out
+
+
+def build_parent_map(tree: ast.AST) -> dict[int, ast.AST]:
+    parents: dict[int, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[id(child)] = node
+    return parents
+
+
+F32_NAMES = {"float32", "f32"}
+
+
+def is_f32_expr(node: ast.AST) -> bool:
+    """jnp.float32 / np.float32 / "float32" / a local alias named f32."""
+    if isinstance(node, ast.Constant) and node.value in F32_NAMES:
+        return True
+    return attr_name(node) in F32_NAMES
+
+
+def is_astype_f32(node: ast.AST) -> bool:
+    """x.astype(jnp.float32)-shaped call."""
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "astype"
+            and len(node.args) == 1
+            and is_f32_expr(node.args[0]))
+
+
+def contains(node: ast.AST, pred) -> bool:
+    return any(pred(n) for n in ast.walk(node))
+
+
+# attributes/calls whose results are trace-time-static (never tracers)
+STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "weak_type", "sharding"}
+_STATIC_CALLS = {"len", "min", "max", "tuple", "list", "set", "dict",
+                 "range", "enumerate", "zip", "sorted", "isinstance",
+                 "hasattr", "getattr", "prod", "str", "repr"}
+
+
+def is_nontracer_expr(node: ast.AST) -> bool:
+    """Conservatively true when an expression cannot produce a tracer:
+    literals, .shape/.ndim/.dtype probes, len()/min()/tuple() and other
+    structural builtins, and arithmetic/comparison chains thereof."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Attribute):
+        return node.attr in STATIC_ATTRS
+    if isinstance(node, ast.Subscript):
+        return is_nontracer_expr(node.value)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(is_nontracer_expr(e) for e in node.elts)
+    if isinstance(node, ast.Call):
+        return attr_name(node.func) in _STATIC_CALLS
+    if isinstance(node, ast.BinOp):
+        return is_nontracer_expr(node.left) and is_nontracer_expr(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return is_nontracer_expr(node.operand)
+    if isinstance(node, (ast.BoolOp, ast.Compare)):
+        return True                      # Python bool results, not tracers
+    return False
+
+
+def static_params(fn: ast.AST) -> set[str]:
+    """Parameter names marked static via jit(..., static_argnames=...) /
+    static_argnums in the function's decorators (sanctioned Python values —
+    branching on them is the POINT of marking them static)."""
+    if isinstance(fn, ast.Lambda):
+        return set()
+    pos = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    out: set[str] = set()
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                vals = (kw.value.elts
+                        if isinstance(kw.value, (ast.Tuple, ast.List))
+                        else [kw.value])
+                out.update(v.value for v in vals
+                           if isinstance(v, ast.Constant)
+                           and isinstance(v.value, str))
+            elif kw.arg == "static_argnums":
+                vals = (kw.value.elts
+                        if isinstance(kw.value, (ast.Tuple, ast.List))
+                        else [kw.value])
+                for v in vals:
+                    if (isinstance(v, ast.Constant)
+                            and isinstance(v.value, int)
+                            and v.value < len(pos)):
+                        out.add(pos[v.value])
+    return out

@@ -1,0 +1,89 @@
+"""host-sync-in-traced: no implicit host round-trips inside traced code.
+
+Inside a function that jax traces (jit / scan / shard_map / vmap / ...,
+module-locally visible — see rules._common.traced_functions), any of
+
+  ``.item()``, ``.tolist()``, ``float(x)``, ``int(x)``, ``bool(x)``,
+  ``np.asarray(x)``, ``np.array(x)``, ``jax.device_get``,
+  ``.block_until_ready()``
+
+either fails at trace time (ConcretizationTypeError deep inside a sweep)
+or — worse, under ``io_callback``-style escape hatches and concrete-value
+leaks — forces a device→host sync per call, serializing the exact hot
+loops the HSS machinery exists to keep on-device.
+
+Static/shape-only casts are exempt: ``int(x.shape[0])``, ``float(len(a))``
+and friends resolve at trace time and never touch device data.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import _common
+
+NAME = "host-sync-in-traced"
+DESCRIPTION = "host synchronization reachable inside a jit/scan/shard_map body"
+SCOPE = ("src/repro",)
+
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_SYNC_CASTS = {"float", "int", "bool", "complex"}
+_NP_SYNC_FUNCS = {"asarray", "array"}
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "levels", "leaf_size"}
+
+
+def _is_static_expr(node: ast.AST) -> bool:
+    """Trace-time-static expressions: literals, shape/ndim/size chains,
+    len(...), arithmetic thereof."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Attribute):
+        return node.attr in _STATIC_ATTRS or _is_static_expr(node.value)
+    if isinstance(node, ast.Subscript):
+        return _is_static_expr(node.value)
+    if isinstance(node, ast.Call):
+        if _common.attr_name(node.func) in {"len", "prod", "min", "max"}:
+            return True
+        return False
+    if isinstance(node, ast.BinOp):
+        return _is_static_expr(node.left) and _is_static_expr(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _is_static_expr(node.operand)
+    if isinstance(node, ast.Name):
+        return False
+    return False
+
+
+def check(path: str, tree: ast.AST, lines: list[str]) -> list[Finding]:
+    findings = []
+    seen_lines: set[int] = set()
+    for fn in _common.traced_functions(tree):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _common.attr_name(node.func)
+            bad = None
+            if (isinstance(node.func, ast.Attribute)
+                    and name in _SYNC_METHODS):
+                bad = f".{name}()"
+            elif isinstance(node.func, ast.Name) and name in _SYNC_CASTS:
+                if node.args and not _is_static_expr(node.args[0]):
+                    bad = f"{name}()"
+            elif (name in _NP_SYNC_FUNCS
+                  and _common.root_name(node.func) in ("np", "numpy")):
+                bad = f"np.{name}()"
+            elif name == "device_get":
+                bad = "jax.device_get()"
+            if bad is None or node.lineno in seen_lines:
+                continue
+            seen_lines.add(node.lineno)
+            findings.append(Finding(
+                rule=NAME, path=path, line=node.lineno,
+                message=(f"{bad} inside a traced function body — this "
+                         "either breaks tracing or forces a device→host "
+                         "sync per call; keep the value on-device (jnp "
+                         "ops) or hoist the host work out of the traced "
+                         "region"),
+                line_content=lines[node.lineno - 1].strip(),
+            ))
+    return findings

@@ -1,0 +1,79 @@
+"""precision-accumulate: hot-path contractions must pin f32 accumulation.
+
+Every ``jnp.einsum`` / ``matmul`` / ``dot`` / ``tensordot`` /
+``lax.dot_general`` on the hot paths (core/, kernels/, models/) must pass
+``preferred_element_type`` — otherwise a bf16-stored operand silently
+accumulates in bf16 and the ADMM inner solves drift (Boyd's convergence
+analysis assumes exact inner solves; the PR 3 bf16-vs-f32 regression pins
+the contract at ~3e-3 rel, bf16 accumulation would be ~1e-1).
+
+Exemptions (explicit intent, not silence):
+  * the call already passes ``preferred_element_type=...``;
+  * the result is immediately ``.astype(jnp.float32)`` — the author
+    acknowledged the precision boundary in-code;
+  * an operand is ``.astype(jnp.float32)``-cast — the inputs are forced to
+    f32, so accumulation is f32 by dtype semantics.
+
+The bare ``@`` operator is deliberately out of scope here: it has no
+``preferred_element_type`` channel and is used on host-side/f32-only small
+dense math throughout core/.  The trace layer
+(jaxpr_check.dtype_downcasts) sees every ``dot_general`` on the real hot
+paths regardless of surface syntax, so ``@`` on bf16 data cannot hide.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import _common
+
+NAME = "precision-accumulate"
+DESCRIPTION = ("contraction without preferred_element_type on a hot path "
+               "(f32-accumulation convention, PR 3)")
+SCOPE = ("src/repro/core", "src/repro/kernels", "src/repro/models")
+
+_ACC_FUNCS = {"einsum", "matmul", "dot", "tensordot", "vdot", "dot_general"}
+# only device-side namespaces: host numpy (np./numpy.) math has no
+# bf16-accumulation hazard
+_DEVICE_ROOTS = {"jnp", "jax", "lax", "pl", "plgpu", "pltpu"}
+
+
+def _is_acc_call(node: ast.Call) -> bool:
+    name = _common.attr_name(node.func)
+    if name not in _ACC_FUNCS:
+        return False
+    if isinstance(node.func, ast.Name):       # from jax.numpy import einsum
+        return True
+    root = _common.root_name(node.func)
+    return root in _DEVICE_ROOTS
+
+
+def check(path: str, tree: ast.AST, lines: list[str]) -> list[Finding]:
+    # nodes living inside the value of an .astype(f32) call are exempt
+    exempt: set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _common.is_astype_f32(node):
+            for sub in ast.walk(node.func.value):
+                exempt.add(id(sub))
+
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call) and _is_acc_call(node)):
+            continue
+        if id(node) in exempt:
+            continue
+        if any(kw.arg == "preferred_element_type" for kw in node.keywords):
+            continue
+        if any(_common.contains(arg, _common.is_astype_f32)
+               for arg in node.args):
+            continue
+        fn = _common.attr_name(node.func)
+        findings.append(Finding(
+            rule=NAME, path=path, line=node.lineno,
+            message=(f"{fn} without preferred_element_type — pass "
+                     "preferred_element_type=jnp.float32 (or cast the "
+                     "result/operands to f32 explicitly) so bf16-stored "
+                     "operands cannot silently accumulate in bf16"),
+            line_content=lines[node.lineno - 1].strip(),
+        ))
+    return findings

@@ -1,0 +1,164 @@
+"""prng-key-reuse: a PRNGKey is consumed at most once without a split.
+
+Reusing a key makes "independent" samples identical — proxy-point sampling
+and synthetic-data generation silently correlate, which corrupts the ID
+sampling quality the adaptive-rank compression leans on.  The sanctioned
+pattern is ``key, sub = jax.random.split(key)`` (the reassignment makes the
+name live again) or indexing distinct rows of a ``jax.random.split(key, n)``
+batch.
+
+Scope-local, order-approximate analysis: keys are names assigned from
+``jax.random.PRNGKey/key/split/fold_in``; passing one to any call consumes
+it (``fold_in``/``key_data`` excepted — deriving is not consuming); ``if``
+branches are analyzed independently (consuming the same key in exclusive
+branches is fine); loop bodies are analyzed twice so loop-carried reuse is
+caught.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import _common
+
+NAME = "prng-key-reuse"
+DESCRIPTION = "PRNGKey consumed twice without an intervening split"
+SCOPE = ("src/repro",)
+
+_PRODUCERS = {"PRNGKey", "key", "split", "wrap_key_data", "fold_in"}
+_NON_CONSUMING = {"fold_in", "key_data", "clone"}
+
+_LIVE = "live"
+
+
+def _is_key_producer(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and _common.attr_name(node.func) in _PRODUCERS
+            and _common.root_name(node.func) in ("jax", "random", "jrandom",
+                                                 "jr"))
+
+
+def _key_expr(node: ast.AST, state: dict) -> str | None:
+    """Resolve an expression to a tracked key id ("key" or "keys[0]")."""
+    if isinstance(node, ast.Name) and node.id in state:
+        return node.id
+    if (isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Name)):
+        base = node.value.id
+        if base not in state:
+            return None
+        idx = node.slice
+        if isinstance(idx, ast.Constant) and isinstance(idx.value, int):
+            composite = f"{base}[{idx.value}]"
+            state.setdefault(composite, (_LIVE, node.lineno))
+            return composite
+    return None
+
+
+class _Scope:
+    def __init__(self, path: str, lines: list[str]):
+        self.path = path
+        self.lines = lines
+        self.findings: list[Finding] = []
+        self._seen: set[tuple[int, str]] = set()
+
+    # -------------------------------------------------------------- #
+    def _consume(self, expr: ast.AST, state: dict) -> None:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = _common.attr_name(node.func)
+            if fname in _NON_CONSUMING or fname in ("PRNGKey", "key"):
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                kid = _key_expr(arg, state)
+                if kid is None:
+                    continue
+                status, line = state[kid]
+                if status == _LIVE:
+                    state[kid] = ("consumed", node.lineno)
+                elif (node.lineno, kid) not in self._seen:
+                    self._seen.add((node.lineno, kid))
+                    self.findings.append(Finding(
+                        rule=NAME, path=self.path, line=node.lineno,
+                        message=(f"PRNGKey {kid!r} already consumed at line "
+                                 f"{line} — split it first "
+                                 "(key, sub = jax.random.split(key)) so "
+                                 "samples stay independent"),
+                        line_content=self.lines[node.lineno - 1].strip(),
+                    ))
+
+    def _assign_targets(self, targets, value, state: dict) -> None:
+        is_key = _is_key_producer(value)
+        names = []
+        for tgt in targets:
+            if isinstance(tgt, ast.Name):
+                names.append(tgt.id)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                names.extend(e.id for e in tgt.elts
+                             if isinstance(e, ast.Name))
+        for name in names:
+            if is_key:
+                state[name] = (_LIVE, value.lineno)
+                # a rebound collection invalidates stale per-index entries
+                for k in [k for k in state if k.startswith(f"{name}[")]:
+                    del state[k]
+            elif name in state:
+                del state[name]
+
+    # -------------------------------------------------------------- #
+    def walk(self, stmts, state: dict) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue                      # separate scope
+            if isinstance(stmt, ast.If):
+                self._consume(stmt.test, state)
+                s1, s2 = dict(state), dict(state)
+                self.walk(stmt.body, s1)
+                self.walk(stmt.orelse, s2)
+                for k in set(s1) | set(s2):
+                    a, b = s1.get(k), s2.get(k)
+                    state[k] = (a if a and a[0] != _LIVE else b) or a or b
+                state.update({k: v for k, v in state.items() if v})
+            elif isinstance(stmt, (ast.For, ast.While)):
+                if isinstance(stmt, ast.For):
+                    self._consume(stmt.iter, state)
+                else:
+                    self._consume(stmt.test, state)
+                self.walk(stmt.body, state)
+                self.walk(stmt.body, state)   # loop-carried reuse
+                self.walk(stmt.orelse, state)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    self._consume(item.context_expr, state)
+                self.walk(stmt.body, state)
+            elif isinstance(stmt, (ast.Try,)):
+                self.walk(stmt.body, state)
+                for h in stmt.handlers:
+                    self.walk(h.body, dict(state))
+                self.walk(stmt.finalbody, state)
+            elif isinstance(stmt, ast.Assign):
+                self._consume(stmt.value, state)
+                self._assign_targets(stmt.targets, stmt.value, state)
+            elif isinstance(stmt, ast.AugAssign):
+                self._consume(stmt.value, state)
+            elif isinstance(stmt, (ast.Expr, ast.Return)):
+                if stmt.value is not None:
+                    self._consume(stmt.value, state)
+            else:
+                for child in ast.iter_child_nodes(stmt):
+                    if isinstance(child, ast.expr):
+                        self._consume(child, state)
+
+
+def check(path: str, tree: ast.AST, lines: list[str]) -> list[Finding]:
+    scopes: list = [tree]
+    scopes += [n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    findings: list[Finding] = []
+    for scope in scopes:
+        sc = _Scope(path, lines)
+        sc.walk(scope.body, {})
+        findings.extend(sc.findings)
+    return findings

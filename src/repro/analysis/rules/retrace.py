@@ -1,0 +1,115 @@
+"""retrace-knob: sweep knobs must enter jitted calls as traced scalars.
+
+The PR 5 convention: a grid-sweep knob (C / ε / ν) crosses into a jitted
+function as ``jnp.asarray(value, jnp.float32)`` — a strong-typed traced
+scalar — so one compile serves the whole warm-started sweep.  Passing raw
+Python literals is fragile: a grid like ``[1, 2.0, 4]`` silently mixes
+weak-int and weak-float signatures and recompiles mid-sweep, and a later
+refactor to ``static_argnums`` turns every grid point into a compile.
+The trace layer (jaxpr_check.check_recompile_engine) proves the invariant
+end-to-end; this rule catches the idiom at the call site.
+
+Flags calls to module-locally visible jit-bound callables
+(``f = jax.jit(...)`` / ``self._jit_x = jax.jit(...)``) where an argument
+is a Python numeric literal, a ``float()``/``int()`` cast, or a local name
+carrying a numeric literal.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import _common
+
+NAME = "retrace-knob"
+DESCRIPTION = ("Python scalar passed to a jitted callable where the "
+               "traced-scalar knob convention applies (PR 5)")
+SCOPE = ("src/repro",)
+
+
+def _is_jit_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    if _common.attr_name(node.func) == "jit":
+        return True
+    # jax.jit(f, ...) spelled through partial
+    return _common.is_partial_of(node, {"jit"})
+
+
+def _jit_bound_names(tree: ast.AST) -> set[str]:
+    """Names (or attribute tails, e.g. "_jit_admm") bound to jax.jit(...)."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or not _is_jit_call(node.value):
+            continue
+        for tgt in node.targets:
+            name = _common.attr_name(tgt)
+            if name:
+                names.add(name)
+    return names
+
+
+def _numeric_constants(tree: ast.AST) -> set[str]:
+    """Local names that carry Python numeric literals: plain assignments
+    and for-loop variables iterating literal numeric collections/range."""
+    consts: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            if (isinstance(node.value, ast.Constant)
+                    and isinstance(node.value.value, (int, float))
+                    and not isinstance(node.value.value, bool)):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        consts.add(tgt.id)
+        elif isinstance(node, ast.For) and isinstance(node.target, ast.Name):
+            it = node.iter
+            if (isinstance(it, (ast.List, ast.Tuple))
+                    and it.elts
+                    and all(isinstance(e, ast.Constant)
+                            and isinstance(e.value, (int, float))
+                            for e in it.elts)):
+                consts.add(node.target.id)
+            elif (isinstance(it, ast.Call)
+                  and _common.attr_name(it.func) == "range"):
+                consts.add(node.target.id)
+    return consts
+
+
+def _scalar_reason(arg: ast.AST, consts: set[str]) -> str | None:
+    if (isinstance(arg, ast.Constant)
+            and isinstance(arg.value, (int, float))
+            and not isinstance(arg.value, bool)):
+        return f"numeric literal {arg.value!r}"
+    if (isinstance(arg, ast.Call) and isinstance(arg.func, ast.Name)
+            and arg.func.id in ("float", "int")):
+        return f"{arg.func.id}() cast"
+    if isinstance(arg, ast.Name) and arg.id in consts:
+        return f"Python numeric {arg.id!r}"
+    return None
+
+
+def check(path: str, tree: ast.AST, lines: list[str]) -> list[Finding]:
+    jit_names = _jit_bound_names(tree)
+    if not jit_names:
+        return []
+    consts = _numeric_constants(tree)
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = _common.attr_name(node.func)
+        if fname not in jit_names or _is_jit_call(node):
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            reason = _scalar_reason(arg, consts)
+            if reason is None:
+                continue
+            findings.append(Finding(
+                rule=NAME, path=path, line=node.lineno,
+                message=(f"{reason} passed to jitted {fname!r} — thread "
+                         "sweep knobs as jnp.asarray(v, jnp.float32) "
+                         "traced scalars (one compile per sweep, PR 5 "
+                         "convention)"),
+                line_content=lines[node.lineno - 1].strip(),
+            ))
+    return findings

@@ -1,0 +1,163 @@
+"""python-branch-on-tracer: no Python control flow on traced values.
+
+Inside a traced function body, ``if``/``while``/``assert`` on a value that
+derives from a traced argument raises ``TracerBoolConversionError`` at
+trace time at best; at worst (when the branch happens to see a concrete
+value during tracing, e.g. after a stray host sync) it silently BAKES one
+branch into the compiled program — the other branch is gone for every
+later call.  Use ``jnp.where`` / ``lax.cond`` / ``lax.select`` instead.
+
+Trace-time-static tests are exempt: ``is None`` / ``is not None``,
+``isinstance(...)``, and ``.shape`` / ``.ndim`` / ``.dtype`` / ``.size``
+attribute probes — those resolve while tracing and are the sanctioned way
+to specialize a traced function on structure.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import _common
+
+NAME = "python-branch-on-tracer"
+DESCRIPTION = "Python if/while/assert on a traced value inside a traced body"
+SCOPE = ("src/repro",)
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "weak_type", "sharding",
+                 "levels", "leaf_size"}
+_TRACED_ROOTS = {"jnp", "jax", "lax", "nn"}
+
+
+def _params(fn: ast.AST) -> set[str]:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return set(names)
+
+
+def _tracerish_names(fn: ast.AST) -> set[str]:
+    """Params of the traced fn (minus static_argnames/nums) + locals
+    assigned from jnp/jax expressions or from expressions referencing an
+    already-tracerish name.  Assignments whose value is structurally
+    static (``b, h, s, d = q.shape``; ``blk = min(256, s)``) stay
+    non-tracer even when a tracerish name appears inside."""
+    tracerish = _params(fn) - _common.static_params(fn)
+    changed = True
+    while changed:               # fixpoint over straight-line derivations
+        changed = False
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            if _common.is_nontracer_expr(node.value):
+                continue
+            derives = False
+            for sub in ast.walk(node.value):
+                if (isinstance(sub, ast.Name)
+                        and sub.id in tracerish):
+                    derives = True
+                elif (isinstance(sub, ast.Call)
+                      and _common.root_name(sub.func) in _TRACED_ROOTS):
+                    derives = True
+            if not derives:
+                continue
+            for tgt in node.targets:
+                tnames = []
+                if isinstance(tgt, ast.Name):
+                    tnames = [tgt.id]
+                elif isinstance(tgt, (ast.Tuple, ast.List)):
+                    tnames = [e.id for e in tgt.elts
+                              if isinstance(e, ast.Name)]
+                for name in tnames:
+                    if name not in tracerish:
+                        tracerish.add(name)
+                        changed = True
+    return tracerish
+
+
+def _is_static_test(test: ast.AST) -> bool:
+    """Tests that resolve at trace time."""
+    if isinstance(test, ast.Compare):
+        ops_static = all(isinstance(op, (ast.Is, ast.IsNot))
+                         for op in test.ops)
+        none_side = any(isinstance(c, ast.Constant) and c.value is None
+                        for c in [test.left] + test.comparators)
+        if ops_static and none_side:
+            return True
+    if (isinstance(test, ast.Call)
+            and _common.attr_name(test.func) in ("isinstance", "hasattr",
+                                                 "callable", "len")):
+        return True
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_static_test(test.operand)
+    if isinstance(test, ast.BoolOp):
+        return all(_is_static_test(v) for v in test.values)
+    return False
+
+
+def _traced_name_in_test(test: ast.AST, tracerish: set[str],
+                         parents: dict) -> str | None:
+    """A tracerish name used non-statically inside the test, if any."""
+    for node in ast.walk(test):
+        if not (isinstance(node, ast.Name) and node.id in tracerish):
+            continue
+        # exempt x.shape / x.ndim / ... probes and isinstance(x, ...)
+        cur = node
+        exempt = False
+        while id(cur) in parents:
+            parent = parents[id(cur)]
+            if (isinstance(parent, ast.Attribute)
+                    and parent.attr in _STATIC_ATTRS):
+                exempt = True
+                break
+            if (isinstance(parent, ast.Call)
+                    and _common.attr_name(parent.func)
+                    in ("isinstance", "len", "hasattr")):
+                exempt = True
+                break
+            if (isinstance(parent, ast.Compare)
+                    and all(isinstance(op, (ast.Is, ast.IsNot))
+                            for op in parent.ops)):
+                exempt = True
+                break
+            if parent is test:
+                break
+            cur = parent
+        if not exempt:
+            return node.id
+    return None
+
+
+def check(path: str, tree: ast.AST, lines: list[str]) -> list[Finding]:
+    findings = []
+    seen: set[int] = set()
+    for fn in _common.traced_functions(tree):
+        tracerish = _tracerish_names(fn)
+        parents = _common.build_parent_map(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                test, kind = node.test, ("while" if isinstance(node, ast.While)
+                                         else "if")
+            elif isinstance(node, ast.Assert):
+                test, kind = node.test, "assert"
+            elif isinstance(node, ast.IfExp):
+                test, kind = node.test, "conditional expression"
+            else:
+                continue
+            if _is_static_test(test):
+                continue
+            name = _traced_name_in_test(test, tracerish, parents)
+            if name is None or test.lineno in seen:
+                continue
+            seen.add(test.lineno)
+            findings.append(Finding(
+                rule=NAME, path=path, line=test.lineno,
+                message=(f"Python {kind} on {name!r}, which derives from a "
+                         "traced value — use jnp.where / lax.cond / "
+                         "lax.select so both branches stay in the compiled "
+                         "program"),
+                line_content=lines[test.lineno - 1].strip(),
+            ))
+    return findings

@@ -171,11 +171,13 @@ def admm_boxqp(
                 return v @ sq                              # (k,)
         else:                          # per-problem vectors: one k-RHS solve
             v = solver_mat(task.eq_sa)
-            w1 = jnp.einsum("dk,dk->k", task.eq_sa, v)
+            w1 = jnp.einsum("dk,dk->k", task.eq_sa, v,
+                            preferred_element_type=jnp.float32)
             sv = s_cols * v
 
             def eq_dot(sq):
-                return jnp.einsum("dk,dk->k", v, sq)
+                return jnp.einsum("dk,dk->k", v, sq,
+                                  preferred_element_type=jnp.float32)
         eq_b = jnp.zeros((k,), dtype) if task.eq_b is None else task.eq_b
 
     z_init = jnp.zeros((d, k), dtype) if z0 is None else z0

@@ -198,19 +198,22 @@ def compute_bias_batched(hss: HSSMatrix, ys: Array, z: Array, c_mat: Array,
     functional margin over all bounded SVs when M_p is empty.  ``ys``/``z``/
     ``c_mat``/``masks`` are (d, P) column blocks; returns (P,).
     """
+    f32 = jnp.float32
     on_margin = (
         (z > margin_tol) & (z < c_mat - margin_tol) & (masks > 0)
     ).astype(z.dtype)
     n_m = jnp.sum(on_margin, axis=0)                       # (P,)
     kz = hss.matmat(ys * z)                 # K̃ (Y z) — one O(N r) sweep
-    num = jnp.einsum("dp,dp->p", on_margin, kz) - jnp.einsum(
-        "dp,dp->p", on_margin, ys)
+    num = (jnp.einsum("dp,dp->p", on_margin, kz, preferred_element_type=f32)
+           - jnp.einsum("dp,dp->p", on_margin, ys,
+                        preferred_element_type=f32))
     b_margin = -num / jnp.maximum(n_m, 1.0)
     # Fallback per problem: average functional margin over all (bounded) SVs.
     sv = ((z > margin_tol) & (masks > 0)).astype(z.dtype)
     n_sv = jnp.maximum(jnp.sum(sv, axis=0), 1.0)
-    b_all = -(jnp.einsum("dp,dp->p", sv, kz)
-              - jnp.einsum("dp,dp->p", sv, ys)) / n_sv
+    b_all = -(jnp.einsum("dp,dp->p", sv, kz, preferred_element_type=f32)
+              - jnp.einsum("dp,dp->p", sv, ys,
+                           preferred_element_type=f32)) / n_sv
     return jnp.where(n_m > 0, b_margin, b_all)
 
 

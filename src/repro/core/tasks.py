@@ -115,11 +115,16 @@ def compute_bias_svr_batched(hss: HSSMatrix, targets: Array, alpha: Array,
     on_margin = ((absa > tol) & (absa < c_mat - tol)
                  & (masks > 0)).astype(alpha.dtype)
     n_m = jnp.sum(on_margin, axis=0)
-    b_margin = jnp.einsum("dp,dp->p", on_margin, resid) / jnp.maximum(n_m, 1.0)
+    f32 = jnp.float32
+    b_margin = (jnp.einsum("dp,dp->p", on_margin, resid,
+                           preferred_element_type=f32)
+                / jnp.maximum(n_m, 1.0))
     sv = ((absa > tol) & (masks > 0)).astype(alpha.dtype)
     n_sv = jnp.sum(sv, axis=0)
-    b_sv = jnp.einsum("dp,dp->p", sv, resid) / jnp.maximum(n_sv, 1.0)
-    b_all = (jnp.einsum("dp,dp->p", masks, targets - k_alpha)
+    b_sv = (jnp.einsum("dp,dp->p", sv, resid, preferred_element_type=f32)
+            / jnp.maximum(n_sv, 1.0))
+    b_all = (jnp.einsum("dp,dp->p", masks, targets - k_alpha,
+                        preferred_element_type=f32)
              / jnp.maximum(jnp.sum(masks, axis=0), 1.0))
     return jnp.where(n_m > 0, b_margin, jnp.where(n_sv > 0, b_sv, b_all))
 
@@ -138,11 +143,14 @@ def compute_rho_oneclass_batched(hss: HSSMatrix, alpha: Array, hi_mat: Array,
     on_margin = ((alpha > tol) & (alpha < hi_mat - tol)
                  & (masks > 0)).astype(alpha.dtype)
     n_m = jnp.sum(on_margin, axis=0)
-    rho_margin = (jnp.einsum("dp,dp->p", on_margin, k_alpha)
+    f32 = jnp.float32
+    rho_margin = (jnp.einsum("dp,dp->p", on_margin, k_alpha,
+                             preferred_element_type=f32)
                   / jnp.maximum(n_m, 1.0))
     sv = ((alpha > tol) & (masks > 0)).astype(alpha.dtype)
     n_sv = jnp.maximum(jnp.sum(sv, axis=0), 1.0)
-    rho_sv = jnp.einsum("dp,dp->p", sv, k_alpha) / n_sv
+    rho_sv = (jnp.einsum("dp,dp->p", sv, k_alpha, preferred_element_type=f32)
+              / n_sv)
     return jnp.where(n_m > 0, rho_margin, rho_sv)
 
 

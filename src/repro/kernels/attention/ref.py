@@ -31,4 +31,6 @@ def attention_ref(
         mask &= (qi - kj) < window
     logits = jnp.where(mask, logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
-    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)
+    # accumulate P·V in f32 (matches the Pallas kernel), cast once on exit
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

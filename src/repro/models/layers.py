@@ -321,9 +321,13 @@ def _moe_dispatch_chunk(xf: Array, p: MoEParams, top_k: int, cap: int,
     wg = jnp.pad(p.w_gate, pad_e).astype(xf.dtype)
     wu = jnp.pad(p.w_up, pad_e).astype(xf.dtype)
     wd = jnp.pad(p.w_down, pad_e).astype(xf.dtype)
-    hgate = jnp.einsum("ecd,edf->ecf", buf, wg)
-    hup = jnp.einsum("ecd,edf->ecf", buf, wu)
-    hout = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hgate) * hup, wd)
+    hgate = jnp.einsum("ecd,edf->ecf", buf, wg,
+                       preferred_element_type=jnp.float32)
+    hup = jnp.einsum("ecd,edf->ecf", buf, wu,
+                     preferred_element_type=jnp.float32)
+    hout = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hgate) * hup,
+                      wd.astype(jnp.float32),
+                      preferred_element_type=jnp.float32).astype(xf.dtype)
     hout = constrain(hout, ("model", "data", None))
 
     yflat = hout.reshape(e_pad * cap, d)
@@ -374,9 +378,13 @@ def _moe_local_chunk(xf: Array, p_router: Array, wg: Array, wu: Array,
     buf = jnp.zeros((e_loc * cap + 1, d), xf.dtype).at[slot].set(
         jnp.where(local[:, None], xf[st], 0.0))
     buf = buf[:-1].reshape(e_loc, cap, d)
-    hgate = jnp.einsum("ecd,edf->ecf", buf, wg)
-    hup = jnp.einsum("ecd,edf->ecf", buf, wu)
-    hout = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hgate) * hup, wd)
+    hgate = jnp.einsum("ecd,edf->ecf", buf, wg,
+                       preferred_element_type=jnp.float32)
+    hup = jnp.einsum("ecd,edf->ecf", buf, wu,
+                     preferred_element_type=jnp.float32)
+    hout = jnp.einsum("ecf,efd->ecd", jax.nn.silu(hgate) * hup,
+                      wd.astype(jnp.float32),
+                      preferred_element_type=jnp.float32).astype(xf.dtype)
 
     yflat = jnp.concatenate(
         [hout.reshape(e_loc * cap, d), jnp.zeros((1, d), xf.dtype)], axis=0)

@@ -127,7 +127,9 @@ def ssm_decode_step(x: Array, p: SSMParams, cache: SSMCache, cfg
 
     xbc = jnp.concatenate([xs, b, c], axis=-1)          # (B, conv_dim)
     window = jnp.concatenate([cache.conv, xbc[:, None]], axis=1)  # (B,convw,·)
-    conv_out = jnp.einsum("bwc,wc->bc", window, p.conv_w) + p.conv_b
+    conv_out = jnp.einsum("bwc,wc->bc", window, p.conv_w,
+                          preferred_element_type=jnp.float32
+                          ).astype(window.dtype) + p.conv_b
     xbc = jax.nn.silu(conv_out)
     new_conv = window[:, 1:]
 
@@ -145,7 +147,8 @@ def ssm_decode_step(x: Array, p: SSMParams, cache: SSMCache, cfg
     decay = jnp.exp(dt * a)[..., None, None]            # (B, H, 1, 1)
     upd = dt[..., None, None] * b[..., None] * xs[:, :, None, :]
     state = cache.state * decay + upd                   # (B, H, N, P)
-    y = jnp.einsum("bhn,bhnp->bhp", c, state)
+    y = jnp.einsum("bhn,bhnp->bhp", c, state,
+                   preferred_element_type=jnp.float32)
     y = y + p.d_skip[None, :, None] * xs
     y = y.reshape(bsz, d_in).astype(x.dtype)
     y = _gated_norm(y, z, p.norm, cfg.norm_eps)

@@ -1,0 +1,30 @@
+"""Clean fixture: the sanctioned idiom for every rule, zero findings."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("block",))
+def protected(a, b, block=64):
+    if a.ndim == 2:
+        acc = jnp.einsum("ij,jk->ik", a, b,
+                         preferred_element_type=jnp.float32)
+    else:
+        acc = jnp.matmul(a, b).astype(jnp.float32)
+    return acc
+
+
+run = jax.jit(protected)
+
+
+def sweep(x, grid):
+    out = []
+    for c in grid:
+        out.append(run(x, jnp.asarray(c, jnp.float32)))
+    return out
+
+
+def sample(n):
+    key, sub = jax.random.split(jax.random.PRNGKey(0))
+    return jax.random.normal(sub, (n,)), jax.random.normal(key, (n,))

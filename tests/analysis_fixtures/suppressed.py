@@ -1,0 +1,7 @@
+"""Fixture: a deliberate violation silenced by an inline disable comment."""
+import jax.numpy as jnp
+
+
+def deliberate(a, b):
+    # operands are f32-by-construction two calls upstream
+    return jnp.einsum("ij,jk->ik", a, b)  # lint: disable=precision-accumulate

@@ -1,0 +1,29 @@
+"""Seeded fixture: host syncs inside traced bodies (and static-cast exemptions)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_float(x):
+    return float(x.sum())      # VIOLATION host-sync-in-traced
+
+
+def body(carry, x):
+    carry = carry + x.item()   # VIOLATION host-sync-in-traced
+    np.asarray(x)              # VIOLATION host-sync-in-traced
+    return carry, carry
+
+
+def run(xs):
+    return jax.lax.scan(body, 0.0, xs)
+
+
+@jax.jit
+def ok_static(x):
+    m = int(x.shape[0] * x.shape[1])
+    return x.reshape(m)
+
+
+def never_traced_here(x):
+    return float(jnp.sum(x))   # helper not handed to any transform: clean

@@ -1,0 +1,14 @@
+"""Seeded fixture: unprotected hot-path contractions (and every exemption)."""
+import jax.numpy as jnp
+
+
+def bad_pair(a, b):
+    hgate = jnp.einsum("ij,jk->ik", a, b)  # VIOLATION precision-accumulate
+    return jnp.matmul(hgate, b)            # VIOLATION precision-accumulate
+
+
+def ok_exempt(a, b):
+    c = jnp.einsum("ij,jk->ik", a, b, preferred_element_type=jnp.float32)
+    d = jnp.dot(a.astype(jnp.float32), b)
+    e = jnp.matmul(a, b).astype(jnp.float32)
+    return c + d + e

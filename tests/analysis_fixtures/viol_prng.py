@@ -1,0 +1,32 @@
+"""Seeded fixture: PRNG key reuse (and the sanctioned split patterns)."""
+import jax
+
+
+def bad_reuse(n):
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (n,))
+    b = jax.random.uniform(key, (n,))  # VIOLATION prng-key-reuse
+    return a + b
+
+
+def ok_split(n):
+    key = jax.random.PRNGKey(0)
+    key, sub = jax.random.split(key)
+    a = jax.random.normal(sub, (n,))
+    b = jax.random.normal(key, (n,))   # relived by the split reassignment
+    return a + b
+
+
+def ok_batch(n):
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    a = jax.random.normal(keys[0], (n,))
+    b = jax.random.normal(keys[1], (n,))
+    return a + b
+
+
+def bad_loop(n):
+    key = jax.random.PRNGKey(2)
+    total = 0.0
+    for _ in range(3):
+        total = total + jax.random.normal(key, (n,))  # VIOLATION prng-key-reuse
+    return total

@@ -1,0 +1,21 @@
+"""Seeded fixture: Python scalars crossing a jit boundary (PR 5 convention)."""
+import jax
+import jax.numpy as jnp
+
+
+def f(x, c):
+    return x * c
+
+
+run = jax.jit(f)
+
+
+def sweep(x):
+    out = []
+    for c in [0.5, 1.0, 2.0]:
+        out.append(run(x, c))          # VIOLATION retrace-knob
+    out.append(run(x, 4.0))            # VIOLATION retrace-knob
+    out.append(run(x, float("8")))     # VIOLATION retrace-knob
+    knob = jnp.asarray(2.0, jnp.float32)
+    out.append(run(x, knob))           # traced scalar: clean
+    return out

@@ -1,0 +1,35 @@
+"""Seeded fixture: Python control flow on traced values (and static probes)."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_branch(x, thresh):
+    if x.sum() > thresh:               # VIOLATION python-branch-on-tracer
+        return x
+    return -x
+
+
+@jax.jit
+def bad_while(x):
+    r = jnp.abs(x)
+    while r.max() > 1.0:               # VIOLATION python-branch-on-tracer
+        r = r * 0.5
+    return r
+
+
+@partial(jax.jit, static_argnames=("blocks",))
+def ok_static(x, blocks=4):
+    if x.ndim == 1:                    # shape probe: resolves at trace time
+        x = x[None, :]
+    assert x.shape[0] % blocks == 0    # static arg: branching is the point
+    return x
+
+
+@jax.jit
+def ok_none(x, scale=None):
+    if scale is None:                  # is-None: trace-time static
+        scale = 1.0
+    return x * scale

@@ -140,3 +140,60 @@ def test_bf16_storage_solve_accuracy(beta):
     assert x16.dtype == jnp.float32              # f32 accumulation contract
     rel = float(jnp.linalg.norm(x16 - x32) / jnp.linalg.norm(x32))
     assert rel < 1e-2, rel                       # measured ~3.3e-3
+
+
+def test_bf16_inputs_bias_extraction_accuracy():
+    """compute_bias_batched keeps f32 accumulation when its inputs arrive
+    bf16: the bias einsums pin preferred_element_type=float32, so the only
+    error vs the f32 path is INPUT rounding (~1e-2), never the ~1e-1 drift
+    of a bf16 accumulator over d≈1000 terms.  Pins the core/svm.py fix;
+    the jaxpr assertion proves no contraction anywhere in the bias graph
+    accumulates below f32."""
+    from repro.analysis import jaxpr_check
+    from repro.core.svm import compute_bias_batched
+
+    hss = _hss(n=1024, leaf=64, rank=24)
+    d = hss.n
+    rng = np.random.default_rng(5)
+    ys = jnp.asarray(np.sign(rng.normal(size=(d, 1))), jnp.float32)
+    z = jnp.asarray(rng.uniform(0.05, 0.95, size=(d, 1)), jnp.float32)
+    ones = jnp.ones((d, 1), jnp.float32)
+    b32 = compute_bias_batched(hss, ys, z, ones, ones)
+
+    ys16, z16 = ys.astype(jnp.bfloat16), z.astype(jnp.bfloat16)
+    ones16 = ones.astype(jnp.bfloat16)
+    jaxpr = jax.make_jaxpr(lambda y_, z_, m_: compute_bias_batched(
+        hss, y_, z_, m_, m_))(ys16, z16, ones16)
+    assert jaxpr_check.dtype_downcasts(jaxpr) == []
+    b16 = compute_bias_batched(hss, ys16, z16, ones16, ones16)
+    rel = float(jnp.abs(b16 - b32)[0] / jnp.maximum(jnp.abs(b32)[0], 1e-6))
+    assert rel < 5e-2, rel
+
+
+def test_bf16_storage_admm_no_downcast_and_accuracy():
+    """The full ADMM graph (solve + equality projection + box clamp) over a
+    bf16-STORED factorization: (a) its jaxpr contains no low-precision
+    dot_general accumulator — pins the core/admm.py eq-projection fix and
+    the solve chain together; (b) the iterates stay within bf16 storage
+    rounding of the f32 run."""
+    from repro.analysis import jaxpr_check
+    from repro.core import admm as admm_mod
+
+    hss = _hss(n=512, leaf=64, rank=24)
+    fac32 = factorization.factorize(hss, 10.0)
+    fac16 = factorization.factorize(hss, 10.0, store_dtype="bfloat16")
+    rng = np.random.default_rng(4)
+    ys = jnp.asarray(np.sign(rng.normal(size=(1, 512))), jnp.float32)
+    cbox = jnp.ones((1, 512), jnp.float32)
+
+    def run(fac):
+        task = admm_mod.svm_task(ys, cbox)
+        state, _ = admm_mod.admm_boxqp(fac.solve_mat, task, fac.beta, 8)
+        return state.z
+
+    jaxpr = jax.make_jaxpr(lambda f_: run(f_))(fac16)
+    assert jaxpr_check.dtype_downcasts(jaxpr) == [], \
+        jaxpr_check.dtype_downcasts(jaxpr)
+    z32, z16 = run(fac32), run(fac16)
+    rel = float(jnp.linalg.norm(z16 - z32) / jnp.linalg.norm(z32))
+    assert rel < 2e-2, rel
