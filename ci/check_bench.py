@@ -10,13 +10,16 @@ Only cases present in BOTH files are compared, so adding or retiring bench
 cases never trips the guard; accuracy improvements pass.  Rank/memory
 fields are machine noise across hosts and are deliberately not guarded.
 Per-case stage wall times (compression_s / factorization_s / admm_s) get a
-WARN-ONLY check: a stage slower than --time-factor (default 2×) vs the
+WARN-ONLY check: a stage slower than --time-factor (default 1.5×) vs the
 committed reference is printed but never fails the run — cross-host timing
-noise makes a hard gate dishonest, but a silent 5× compression regression
-should at least be visible in the CI log.
+noise makes a hard gate dishonest, but a silent compression regression
+should at least be visible in the CI log.  The recorded stage times are
+STEADY-STATE (the bench warms up each shape before timing and reports the
+one-off compile cost separately as ``*_cold_s``), so the factor/floor can
+be much tighter than when compile time was folded in.
 
 Usage: python ci/check_bench.py REF.json NEW.json [--tol 0.02]
-       [--time-factor 2.0] [--time-floor 0.05]
+       [--time-factor 1.5] [--time-floor 0.02]
 """
 from __future__ import annotations
 
@@ -37,12 +40,13 @@ def main() -> int:
     ap.add_argument("new", help="freshly generated BENCH_svm.json")
     ap.add_argument("--tol", type=float, default=0.02,
                     help="max tolerated accuracy DROP per case (default 0.02)")
-    ap.add_argument("--time-factor", type=float, default=2.0,
-                    help="warn when a stage wall time exceeds this factor "
-                         "of the reference (warn-only, default 2.0)")
-    ap.add_argument("--time-floor", type=float, default=0.05,
+    ap.add_argument("--time-factor", type=float, default=1.5,
+                    help="warn when a steady-state stage wall time exceeds "
+                         "this factor of the reference (warn-only, "
+                         "default 1.5)")
+    ap.add_argument("--time-floor", type=float, default=0.02,
                     help="ignore stage times below this many seconds in the "
-                         "reference (timing noise, default 0.05)")
+                         "reference (timing noise, default 0.02)")
     args = ap.parse_args()
 
     ref, new = load_cases(args.ref), load_cases(args.new)

@@ -217,6 +217,40 @@ def check_hot_paths(store_dtype: str | None = "bfloat16") -> list[Finding]:
     return findings
 
 
+def check_compress_kernels() -> list[Finding]:
+    """Trace the fused Pallas compression stages (repro.kernels.compress)
+    and assert no sub-f32 accumulation and no host callbacks.
+
+    Probed on bf16 inputs — the configuration where a missing
+    ``preferred_element_type`` inside the fused assemble+ID deflation loop
+    (or the laplacian block kernel's epilogue) would actually produce a
+    bf16 accumulator.  ``iter_eqns`` recurses through the ``pallas_call``
+    body jaxpr, so the on-chip contractions are covered, not just the
+    padding wrapper.  The plain ``compress`` orchestration stays
+    deliberately untraced (host-orchestrated by design — see module
+    docstring); this check covers the device stages it dispatches to.
+    """
+    from repro.kernels.compress import ops as cops
+    from repro.kernels.compress.laplacian import laplacian_block
+
+    b, m, s, f, k = 2, 32, 16, 4, 8
+    xc = jnp.zeros((b, m, f), jnp.bfloat16)
+    xp = jnp.zeros((b, s, f), jnp.bfloat16)
+    findings = []
+    for name in ("gaussian", "laplacian"):
+        jaxpr = jax.make_jaxpr(lambda c, p: cops.batched_assemble_id(
+            c, p, k, kernel_name=name, h=1.0, rtol=1e-4, adaptive=True,
+            interpret=True))(xc, xp)
+        findings += _check_traced(f"fused_assemble_id[{name}]", jaxpr)
+    xa = jnp.zeros((33, f), jnp.bfloat16)
+    xb = jnp.zeros((65, f), jnp.bfloat16)
+    findings += _check_traced(
+        "laplacian_block",
+        jax.make_jaxpr(lambda a, c: laplacian_block(
+            a, c, 1.0, interpret=True))(xa, xb))
+    return findings
+
+
 def check_recompile_engine(c_grid=(0.5, 1.0, 2.0, 4.0)) -> list[Finding]:
     """A warm-started C-sweep on the engine must compile the ADMM run
     exactly once (PR 5's traced-scalar knob convention, end to end)."""
@@ -337,6 +371,7 @@ def run_all() -> list[Finding]:
     """Every trace-level check; empty result = hot paths are clean."""
     findings = []
     findings += check_hot_paths()
+    findings += check_compress_kernels()
     findings += check_recompile_engine()
     findings += check_mesh_placement()
     # informational skips are not failures

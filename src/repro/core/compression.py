@@ -18,6 +18,7 @@ for HSS-ANN (§1.2).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Sequence
@@ -32,6 +33,93 @@ from repro.core.kernelfn import KernelSpec, kernel_block
 from repro.core.tree import ClusterTree
 
 Array = jax.Array
+
+# Counting-kernel instrumentation state (see ``counting_kernel_evals``).
+_EVAL_STATE: dict | None = None
+
+
+@contextlib.contextmanager
+def counting_kernel_evals():
+    """Count the kernel entries a ``compress`` call actually evaluates.
+
+    Every kernel evaluation inside the build flows through the two seams
+    below (``_batched_kernel_block`` / ``_batched_row_id``), which add the
+    logical block sizes to this counter whenever their operands are concrete
+    — i.e. for the eager host-orchestrated ``compress``.  Inside traced
+    contexts (``compress_sharded``'s shard_map bodies) the operands are
+    tracers and nothing is counted: per-device shapes would double-count.
+
+    Yields a dict whose ``"count"`` entry is the running total; the property
+    test pins it against the hand-derived ``kernel_eval_count`` formula.
+    """
+    global _EVAL_STATE
+    prev = _EVAL_STATE
+    _EVAL_STATE = {"count": 0}
+    try:
+        yield _EVAL_STATE
+    finally:
+        _EVAL_STATE = prev
+
+
+def _note_evals(xa: Array, xb: Array, count: int) -> None:
+    if _EVAL_STATE is not None and not (
+            isinstance(xa, jax.core.Tracer) or isinstance(xb, jax.core.Tracer)):
+        _EVAL_STATE["count"] += count
+
+
+def _batched_kernel_block(spec: KernelSpec, xa: Array, xb: Array) -> Array:
+    """vmapped ``kernel_block`` over (B, ·, f) stacks — the eval-count seam."""
+    _note_evals(xa, xb, xa.shape[0] * xa.shape[1] * xb.shape[1])
+    return jax.vmap(lambda a, b: kernel_block(spec, a, b))(xa, xb)
+
+
+def _batched_row_id(
+    spec: KernelSpec,
+    xc: Array,
+    xp: Array,
+    k: int,
+    rtol: float | None,
+    adaptive: bool,
+    cmask: Array | None = None,
+) -> tuple[Array, Array, Array]:
+    """All row IDs of one tree level behind ``KernelSpec.impl``.
+
+    xc (B, m, f) candidate points, xp (B, s, f) proxy points.  Returns
+    (piv (B, k) int32, p_mat (B, m, k), ranks (B,) int32).  The Pallas impls
+    dispatch to the fused assemble+ID kernel (``repro.kernels.compress``):
+    the sampled blocks K(xc_i, xp_i) are evaluated in VMEM and consumed by
+    the pivoted-QR deflation loop in place, one launch for the whole level.
+    ``impl="xla"`` keeps the reference per-node assemble-then-ID closures.
+    Both paths count the SAME logical kernel evaluations at this seam, so
+    ``kernel_eval_count`` is impl-independent.
+    """
+    _note_evals(xc, xp, xc.shape[0] * xc.shape[1] * xp.shape[1])
+    eff_rtol = 1e-5 if rtol is None else rtol
+    if spec.impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.compress import ops as cops
+
+        return cops.batched_assemble_id(
+            xc, xp, k, kernel_name=spec.name, h=spec.h, rtol=eff_rtol,
+            adaptive=adaptive, cmask=cmask,
+            interpret=(spec.impl == "pallas_interpret"))
+
+    def one(xc_i: Array, xp_i: Array, cm_i: Array | None):
+        a = kernel_block(spec, xc_i, xp_i)
+        if cm_i is not None:
+            # Zero dead candidate rows: skeleton propagation only ever
+            # forwards LIVE child skeleton points (dead rows get zero
+            # interpolation weights and sort behind every live pivot).
+            a = a * cm_i[:, None]
+        if adaptive:
+            piv, p_mat, rk = idqr.row_interp_decomp_ranked(a, k, eff_rtol)
+        else:
+            piv, p_mat = idqr.row_interp_decomp(a, k)
+            rk = jnp.int32(k)
+        return piv.astype(jnp.int32), p_mat, rk
+
+    if cmask is None:
+        return jax.vmap(lambda c, p: one(c, p, None))(xc, xp)
+    return jax.vmap(one)(xc, xp, cmask)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,9 +246,13 @@ def _host_leaf_near(
     if x_perm is not None and n_leaf > 1:
         from scipy.spatial import cKDTree
 
-        kdt = cKDTree(x_perm)
+        # f32 is plenty for neighbour RANKING and keeps scipy happy with
+        # dtypes it cannot handle (bf16); the kernel evaluations themselves
+        # stay in the caller's dtype.
+        x_f32 = np.asarray(x_perm, np.float32)
+        kdt = cKDTree(x_f32)
         k_query = min(max(2 * params.n_near // m + 4, 4), tree.n)
-        _, nbr = kdt.query(x_perm, k=k_query)   # (n, k) incl. self
+        _, nbr = kdt.query(x_f32, k=k_query)   # (n, k) incl. self
         leaf_of = np.arange(tree.n) // m
         # Vectorized over ALL leaves at once (the per-leaf Python loop was
         # the host-preprocessing serial bottleneck at large n_leaf): each
@@ -177,20 +269,30 @@ def _host_leaf_near(
         np.put_along_axis(dup, order, dup_sorted, axis=1)
         invalid = own | dup
         # Rank candidates by distance to the leaf centroid; invalid -> +inf.
-        centroid = x_perm.reshape(n_leaf, m, -1).mean(axis=1)
+        centroid = x_f32.reshape(n_leaf, m, -1).mean(axis=1)
         dist = np.linalg.norm(
-            x_perm[cand] - centroid[:, None, :], axis=2)
+            x_f32[cand] - centroid[:, None, :], axis=2)
         dist[invalid] = np.inf
         pick = np.argsort(dist, axis=1, kind="stable")[:, : params.n_near]
         out[:] = np.take_along_axis(cand, pick, axis=1)
         # Deficit rows (candidate pool smaller than n_near — tiny problems
-        # only): top up from the sibling leaf, as in the data-free fallback.
+        # only): top up from the sibling leaf, EXCLUDING candidates already
+        # placed (a duplicate NEAR proxy is a duplicate sampled-block column:
+        # it wastes ID sample budget and skews the pivot order).  Repeats are
+        # only permitted once the whole sibling leaf is exhausted.
         counts = (~invalid).sum(axis=1)
         for i in np.nonzero(counts < params.n_near)[0]:
-            short = params.n_near - int(counts[i])
+            c = int(counts[i])
+            short = params.n_near - c
             sib = int(i) ^ 1
-            fill = rng.choice(m, size=short, replace=short > m) + sib * m
-            out[i, int(counts[i]):] = fill
+            pool = np.setdiff1d(
+                np.arange(m, dtype=np.int64) + sib * m, out[i, :c])
+            if len(pool) >= short:
+                fill = rng.choice(pool, size=short, replace=False)
+            else:
+                extra = rng.choice(m, size=short - len(pool)) + sib * m
+                fill = np.concatenate([pool, extra])
+            out[i, c:] = fill
         return out
     for i in range(n_leaf):
         sib = i ^ 1
@@ -223,22 +325,14 @@ def compress(
     x_leaves = x_perm.reshape(n_leaf, m, -1)
 
     # ---------------- leaves ---------------- #
-    d_leaf = jax.vmap(lambda xa: kernel_block(spec, xa, xa))(x_leaves)
+    d_leaf = _batched_kernel_block(spec, x_leaves, x_leaves)
 
-    def leaf_basis(xa: Array, prox_idx: Array, leaf_start: Array):
-        xp = jnp.take(x_perm, prox_idx, axis=0)
-        a = kernel_block(spec, xa, xp)            # (m, n_proxy)
-        if adaptive:
-            piv, p_mat, rk = idqr.row_interp_decomp_ranked(a, r0, rtol)
-        else:
-            piv, p_mat = idqr.row_interp_decomp(a, r0)
-            rk = jnp.int32(r0)
-        return p_mat, leaf_start + piv.astype(jnp.int32), rk
-
-    leaf_starts = jnp.arange(n_leaf, dtype=jnp.int32) * m
     prox0 = jnp.concatenate([leaf_near, far_idx[0]], axis=1)
-    u_leaf, skel_leaf, leaf_ranks = jax.vmap(leaf_basis)(
-        x_leaves, prox0, leaf_starts)
+    x_prox0 = jnp.take(x_perm, prox0, axis=0)      # (n_leaf, n_proxy, f)
+    piv0, u_leaf, leaf_ranks = _batched_row_id(
+        spec, x_leaves, x_prox0, r0, rtol, adaptive)
+    leaf_starts = jnp.arange(n_leaf, dtype=jnp.int32) * m
+    skel_leaf = leaf_starts[:, None] + piv0
 
     # ---------------- internal levels ---------------- #
     transfers: list[Array] = []
@@ -259,7 +353,7 @@ def compress(
         # is structural (factorization decouples them; shrink slices them).
         xa = jnp.take(x_perm, cand[:, :r_prev], axis=0)
         xb = jnp.take(x_perm, cand[:, r_prev:], axis=0)
-        b_k = jax.vmap(lambda a, b: kernel_block(spec, a, b))(xa, xb)
+        b_k = _batched_kernel_block(spec, xa, xb)
         if adaptive:
             b_k = _mask_b(b_k, cmask, r_prev)
         b_mats.append(b_k)
@@ -269,23 +363,12 @@ def compress(
         # NEAR proxies: the sibling node's candidate skeletons (dynamic).
         sib = cand.reshape(n_k // 2, 2, 2 * r_prev)[:, ::-1, :].reshape(n_k, 2 * r_prev)
         prox = jnp.concatenate([sib, far_idx[k]], axis=1)
-
-        def node_basis(cand_i: Array, prox_i: Array, cmask_i: Array):
-            xc = jnp.take(x_perm, cand_i, axis=0)
-            xp = jnp.take(x_perm, prox_i, axis=0)
-            a = kernel_block(spec, xc, xp)             # (2 r_prev, n_prox)
-            if adaptive:
-                # Zero dead candidate rows: skeleton propagation only ever
-                # forwards LIVE child skeleton points (dead rows get zero
-                # interpolation weights and sort behind every live pivot).
-                a = a * cmask_i[:, None]
-                piv, p_mat, rk = idqr.row_interp_decomp_ranked(a, r_k, rtol)
-            else:
-                piv, p_mat = idqr.row_interp_decomp(a, r_k)
-                rk = jnp.int32(r_k)
-            return p_mat, jnp.take(cand_i, piv), rk
-
-        t_k, skel_k, rank_k = jax.vmap(node_basis)(cand, prox, cmask)
+        xc = jnp.take(x_perm, cand, axis=0)            # (n_k, 2 r_prev, f)
+        xp = jnp.take(x_perm, prox, axis=0)
+        piv_k, t_k, rank_k = _batched_row_id(
+            spec, xc, xp, r_k, rtol, adaptive,
+            cmask=cmask if adaptive else None)
+        skel_k = jnp.take_along_axis(cand, piv_k, axis=1)
         transfers.append(t_k)
         skels.append(skel_k)
         level_ranks.append(rank_k)
@@ -356,7 +439,10 @@ def compress_sharded(
 
     n, m, K = tree.n, tree.leaf_size, tree.levels
     n_leaf = 2 ** K
-    x_host = np.asarray(jax.device_get(x_perm), np.float32)
+    # Preserve the caller's dtype: the local build does, and downcasting here
+    # (the old behaviour) made the two builds disagree for f64/bf16 inputs.
+    # Host preprocessing that needs f32 (the KD-tree) casts internally.
+    x_host = np.asarray(jax.device_get(x_perm))
     if x_host.shape[0] != n:
         raise ValueError(f"x has {x_host.shape[0]} rows, tree expects {n}")
     nodes, ndev = _mesh_nodes(mesh)
@@ -380,19 +466,10 @@ def compress_sharded(
 
     # ---------------- leaves (shard_map over the node axis) ------------- #
     def _leaf_stage(xl, xp, starts):
-        d = jax.vmap(lambda xa: kernel_block(spec, xa, xa))(xl)
-
-        def one(xa, xpi, s):
-            a = kernel_block(spec, xa, xpi)            # (m, n_proxy)
-            if adaptive:
-                piv, p_mat, rk = idqr.row_interp_decomp_ranked(a, r0, rtol)
-            else:
-                piv, p_mat = idqr.row_interp_decomp(a, r0)
-                rk = jnp.int32(r0)
-            piv = piv.astype(jnp.int32)
-            return p_mat, s + piv, jnp.take(xa, piv, axis=0), rk
-
-        u, skel, spts, rks = jax.vmap(one)(xl, xp, starts)
+        d = _batched_kernel_block(spec, xl, xl)
+        piv, u, rks = _batched_row_id(spec, xl, xp, r0, rtol, adaptive)
+        skel = starts[:, None] + piv
+        spts = jax.vmap(lambda xa, p: jnp.take(xa, p, axis=0))(xl, piv)
         return d, u, skel, spts, rks
 
     leaf_fn = jax.jit(shard_map(
@@ -432,8 +509,7 @@ def compress_sharded(
             if k == K:
                 def _b_only(sp, sr):
                     cp = sp.reshape(loc, 2 * rp, sp.shape[-1])
-                    b = jax.vmap(
-                        lambda c: kernel_block(spec, c[:rp], c[rp:]))(cp)
+                    b = _batched_kernel_block(spec, cp[:, :rp], cp[:, rp:])
                     if adaptive:
                         b = _mask_b(b, _cand_mask(sr, rp, b.dtype), rp)
                     return b
@@ -451,27 +527,17 @@ def compress_sharded(
                 cp = sp.reshape(loc, 2 * rp, f)
                 ci = si.reshape(loc, 2 * rp)
                 cm = _cand_mask(sr, rp, sp.dtype)
-                b = jax.vmap(
-                    lambda c: kernel_block(spec, c[:rp], c[rp:]))(cp)
+                b = _batched_kernel_block(spec, cp[:, :rp], cp[:, rp:])
                 if adaptive:
                     b = _mask_b(b, cm, rp)
                 sib = cp.reshape(loc // 2, 2, 2 * rp, f)[:, ::-1]
                 sib = sib.reshape(loc, 2 * rp, f)
-
-                def node_basis(cp_i, ci_i, cm_i, sp_i, fp_i):
-                    xp_ = jnp.concatenate([sp_i, fp_i], axis=0)
-                    a = kernel_block(spec, cp_i, xp_)
-                    if adaptive:
-                        a = a * cm_i[:, None]
-                        piv, p_mat, rk_i = idqr.row_interp_decomp_ranked(
-                            a, rk, rtol)
-                    else:
-                        piv, p_mat = idqr.row_interp_decomp(a, rk)
-                        rk_i = jnp.int32(rk)
-                    return (p_mat, jnp.take(ci_i, piv),
-                            jnp.take(cp_i, piv, axis=0), rk_i)
-
-                t, ids, pts, rks = jax.vmap(node_basis)(cp, ci, cm, sib, fp)
+                xp_ = jnp.concatenate([sib, fp], axis=1)
+                piv, t, rks = _batched_row_id(
+                    spec, cp, xp_, rk, rtol, adaptive,
+                    cmask=cm if adaptive else None)
+                ids = jnp.take_along_axis(ci, piv, axis=1)
+                pts = jax.vmap(lambda c, p: jnp.take(c, p, axis=0))(cp, piv)
                 return b, t, ids, pts, rks
 
             lvl_fn = jax.jit(shard_map(
@@ -489,9 +555,8 @@ def compress_sharded(
             cand_pts = spts.reshape(n_k, 2 * r_prev, f)
             cand_ids = sids.reshape(n_k, 2 * r_prev)
             cmask = _cand_mask(sranks, r_prev, spts.dtype)
-            b_k = jax.vmap(
-                lambda c: kernel_block(spec, c[:r_prev], c[r_prev:])
-            )(cand_pts)
+            b_k = _batched_kernel_block(
+                spec, cand_pts[:, :r_prev], cand_pts[:, r_prev:])
             if adaptive:
                 b_k = _mask_b(b_k, cmask, r_prev)
             b_mats.append(b_k)
@@ -500,22 +565,13 @@ def compress_sharded(
             sib = cand_pts.reshape(n_k // 2, 2, 2 * r_prev, f)[:, ::-1]
             sib = sib.reshape(n_k, 2 * r_prev, f)
             far_pts = jax.device_put(x_host[far_idx[k]], sh_repl)
-
-            def node_basis(cp_i, ci_i, cm_i, sp_i, fp_i):
-                xp_ = jnp.concatenate([sp_i, fp_i], axis=0)
-                a = kernel_block(spec, cp_i, xp_)
-                if adaptive:
-                    a = a * cm_i[:, None]
-                    piv, p_mat, rk_i = idqr.row_interp_decomp_ranked(
-                        a, r_k, rtol)
-                else:
-                    piv, p_mat = idqr.row_interp_decomp(a, r_k)
-                    rk_i = jnp.int32(r_k)
-                return (p_mat, jnp.take(ci_i, piv),
-                        jnp.take(cp_i, piv, axis=0), rk_i)
-
-            t_k, sids, spts, sranks = jax.vmap(node_basis)(
-                cand_pts, cand_ids, cmask, sib, far_pts)
+            xp_ = jnp.concatenate([sib, far_pts], axis=1)
+            piv_k, t_k, sranks = _batched_row_id(
+                spec, cand_pts, xp_, r_k, rtol, adaptive,
+                cmask=cmask if adaptive else None)
+            sids = jnp.take_along_axis(cand_ids, piv_k, axis=1)
+            spts = jax.vmap(lambda c, p: jnp.take(c, p, axis=0))(
+                cand_pts, piv_k)
             transfers.append(t_k)
             skels.append(sids)
             level_ranks.append(sranks)

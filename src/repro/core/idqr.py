@@ -56,18 +56,21 @@ def cpqr_select(m_mat: Array, k: int) -> tuple[Array, Array]:
     return piv, qs
 
 
-def _interp_core(m_mat: Array, k: int, rtol: float, keep_identity: bool
-                 ) -> tuple[Array, Array, Array]:
-    """Shared ID core: pivoted QR, tolerance truncation, triangular solve.
+def finish_interp(piv: Array, r_full: Array, rtol: float,
+                  keep_identity: bool) -> tuple[Array, Array]:
+    """Truncation + triangular solve from (piv, R = QᵀM): returns (T, rank).
 
-    Returns (piv, T, rank).  With Q from cpqr_select, R = QᵀM and
-    R_J = Qᵀ M[:, J] is (numerically) upper triangular in pivot order, so
-    T = R_J⁻¹ R.  The greedy pivoting makes |R_J[i, i]| (the residual norm at
-    step i) non-increasing, so its decay against ``rtol * |R_J[0, 0]|``
-    reveals the numerical rank: ``rank`` is the longest prefix of directions
-    above the tolerance (STRUMPACK's rel_tol semantics — the static ``k`` is
-    only the hss_max_rank cap).  Truncated directions get a unit diagonal +
-    zeroed row, which makes the triangular solve exact and finite instead of
+    The back half of the ID, shared by the XLA path (``_interp_core``) and
+    the fused Pallas assemble+ID stage (``repro.kernels.compress``), which
+    computes ``piv`` and ``R`` on-chip and hands only those small arrays
+    here.  With Q from cpqr_select, R = QᵀM and R_J = Qᵀ M[:, J] is
+    (numerically) upper triangular in pivot order, so T = R_J⁻¹ R.  The
+    greedy pivoting makes |R_J[i, i]| (the residual norm at step i)
+    non-increasing, so its decay against ``rtol * |R_J[0, 0]|`` reveals the
+    numerical rank: ``rank`` is the longest prefix of directions above the
+    tolerance (STRUMPACK's rel_tol semantics — the static ``k`` is only the
+    hss_max_rank cap).  Truncated directions get a unit diagonal + zeroed
+    row, which makes the triangular solve exact and finite instead of
     amplifying noise through an underflowed diagonal.
 
     ``keep_identity=True`` (legacy fixed-rank mode) re-enforces T[:, J] = I_k
@@ -78,8 +81,8 @@ def _interp_core(m_mat: Array, k: int, rtol: float, keep_identity: bool
     are exactly 0, which is what lets callers mask and later slice them away
     without changing any live value.
     """
-    piv, qs = cpqr_select(m_mat, k)
-    r_full = qs.T @ m_mat                                   # (k, n)
+    k = piv.shape[0]
+    m_dtype = r_full.dtype
     r_skel = jnp.triu(jnp.take(r_full, piv, axis=1))        # (k, k) upper-tri
     diag = jnp.diagonal(r_skel)
     tol = rtol * jnp.maximum(jnp.max(jnp.abs(diag)), 1e-30)
@@ -97,22 +100,32 @@ def _interp_core(m_mat: Array, k: int, rtol: float, keep_identity: bool
         keep = jnp.cumsum(jnp.logical_not(above)) == 0
     rank = jnp.sum(keep).astype(jnp.int32)
     r_safe = jnp.where(keep[:, None], r_skel, 0.0) + jnp.diag(
-        jnp.where(keep, 0.0, 1.0).astype(m_mat.dtype))
+        jnp.where(keep, 0.0, 1.0).astype(m_dtype))
     rhs = jnp.where(keep[:, None], r_full, 0.0)
     t_full = jax.scipy.linalg.solve_triangular(r_safe, rhs, lower=False)
     if keep_identity:
         # Exact identity on all skeleton columns (legacy fixed-rank mode).
-        t_full = t_full.at[:, piv].set(jnp.eye(k, dtype=m_mat.dtype))
+        t_full = t_full.at[:, piv].set(jnp.eye(k, dtype=m_dtype))
     else:
         # Exact identity on LIVE skeleton columns only.  A truncated pivot
         # is not a skeleton: its column keeps the solved interpolation
         # weights over the live skeletons (zeroing it would drop that
         # column's full contribution, not its below-tolerance residual).
-        keep_f = keep.astype(m_mat.dtype)
+        keep_f = keep.astype(m_dtype)
         at_piv = jnp.take(t_full, piv, axis=1)               # (k, k)
         t_full = t_full.at[:, piv].set(jnp.where(
-            keep[None, :], jnp.eye(k, dtype=m_mat.dtype), at_piv))
+            keep[None, :], jnp.eye(k, dtype=m_dtype), at_piv))
         t_full = t_full * keep_f[:, None]
+    return t_full, rank
+
+
+def _interp_core(m_mat: Array, k: int, rtol: float, keep_identity: bool
+                 ) -> tuple[Array, Array, Array]:
+    """Shared ID core: pivoted QR, then ``finish_interp``'s truncation +
+    triangular solve.  Returns (piv, T, rank)."""
+    piv, qs = cpqr_select(m_mat, k)
+    r_full = qs.T @ m_mat                                   # (k, n)
+    t_full, rank = finish_interp(piv, r_full, rtol, keep_identity)
     return piv, t_full, rank
 
 

@@ -80,11 +80,11 @@ _VALID_IMPLS = ("xla", "pallas", "pallas_interpret")
 def kernel_block(spec: KernelSpec, xa: Array, xb: Array) -> Array:
     """Evaluate a (len(xa), len(xb)) kernel block under ``spec``.
 
-    Only the gaussian kernel has a Pallas implementation.  A laplacian spec
-    asking for ``impl="pallas"`` falls back to the XLA path with an explicit
-    ``RuntimeWarning`` — previously the request was silently ignored, which
-    made "pallas speedup" measurements on the laplacian kernel meaningless.
-    Unknown ``impl`` values raise instead of silently running XLA.
+    Both kernels have a Pallas implementation: gaussian in
+    ``repro.kernels.gaussian`` (MXU matmul expansion) and laplacian in
+    ``repro.kernels.compress.laplacian`` (feature-chunked L1 scan, the tiled
+    twin of ``laplacian_block_xla``).  Unknown ``impl`` values raise instead
+    of silently running XLA.
     """
     if spec.impl not in _VALID_IMPLS:
         raise ValueError(
@@ -100,12 +100,11 @@ def kernel_block(spec: KernelSpec, xa: Array, xb: Array) -> Array:
         return gaussian_block_xla(xa, xb, spec.h)
     if spec.name == "laplacian":
         if spec.impl in ("pallas", "pallas_interpret"):
-            import warnings
+            from repro.kernels.compress import laplacian as lops
 
-            warnings.warn(
-                f"KernelSpec(name='laplacian', impl={spec.impl!r}): the "
-                "laplacian kernel has no Pallas implementation; falling back "
-                "to the XLA block path", RuntimeWarning, stacklevel=2)
+            return lops.laplacian_block(
+                xa, xb, spec.h, interpret=(spec.impl == "pallas_interpret")
+            )
         return laplacian_block_xla(xa, xb, spec.h)
     raise ValueError(f"unknown kernel {spec.name!r}")
 

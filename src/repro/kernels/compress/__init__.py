@@ -1,0 +1,10 @@
+"""Fused HSS-compression kernels: assemble+ID in one Pallas launch.
+
+``ops.batched_assemble_id`` runs every node ID of one tree level as a single
+tiled Pallas dispatch — the sampled kernel block K(x_node, x_proxy) is
+evaluated in VMEM and consumed by the pivoted-QR deflation loop in place, so
+it never round-trips through HBM.  ``laplacian.laplacian_block`` is the plain
+block-eval Pallas kernel for the laplacian kernel (the gaussian analogue
+lives in repro.kernels.gaussian).
+"""
+from repro.kernels.compress import laplacian, ops  # noqa: F401

@@ -105,3 +105,39 @@ def test_compression_error_probe():
     hss, k_dense, xp, spec = _build()
     err = float(compression.compression_error(hss, spec, n_probe=4))
     assert err < 8e-2
+
+
+def test_leaf_near_deficit_topup_has_no_duplicates():
+    """Regression: on tiny problems the KD-tree candidate pool runs short and
+    the deficit top-up used to sample the sibling leaf WITH possible repeats
+    of already-placed candidates — duplicate NEAR proxies waste ID sample
+    budget.  Each row must now be duplicate-free whenever the leaf's
+    complement has at least n_near points, and never contain in-leaf points."""
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        m, levels = 8, 2                       # n = 32, n_near = 8
+        n = m * 2 ** levels
+        x = rng.normal(size=(n, 2)).astype(np.float32)
+        t = tree_mod.build_tree(x, leaf_size=m)
+        params = compression.CompressionParams(rank=4, n_near=8, n_far=4,
+                                               seed=seed)
+        near = compression._host_leaf_near(t, params, x[t.perm])
+        assert near.shape == (2 ** levels, params.n_near)
+        leaf_of = np.arange(n) // m
+        for i in range(near.shape[0]):
+            row = near[i]
+            assert len(np.unique(row)) == len(row), (seed, i, row)
+            assert not np.any(leaf_of[row] == i), (seed, i, row)
+
+
+def test_leaf_near_data_free_fallback_shapes():
+    """The data-free (x=None) fallback keeps its sibling-sampling contract."""
+    rng = np.random.default_rng(0)
+    m, levels = 16, 2
+    x = rng.normal(size=(m * 2 ** levels, 3)).astype(np.float32)
+    t = tree_mod.build_tree(x, leaf_size=m)
+    params = compression.CompressionParams(rank=8, n_near=8, n_far=8)
+    near = compression._host_leaf_near(t, params, None)
+    for i in range(near.shape[0]):
+        sib = i ^ 1
+        assert np.all((near[i] >= sib * m) & (near[i] < (sib + 1) * m))

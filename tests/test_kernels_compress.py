@@ -1,0 +1,159 @@
+"""Tests for the fused compression kernels (repro.kernels.compress).
+
+Three layers, mirroring the gaussian parity-test style (interpret mode —
+CPU-only CI):
+
+  * laplacian block kernel: Pallas vs ``laplacian_block_xla`` at odd /
+    non-tile-aligned shapes, f32 and bf16;
+  * fused assemble+ID: pivots EXACTLY equal to the XLA
+    assemble-then-``idqr`` reference on non-degenerate random blocks, and
+    interpolation matrices equal to f32 rounding, fixed-rank and adaptive,
+    both kernels;
+  * end-to-end: ``compress`` with impl="pallas_interpret" vs impl="xla" —
+    identical skeletons and matvec parity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import idqr
+from repro.core.kernelfn import (
+    KernelSpec, gaussian_block_xla, laplacian_block_xla)
+from repro.kernels.compress import ops as cops
+from repro.kernels.compress.laplacian import laplacian_block
+
+
+@pytest.mark.parametrize("ma,mb,f", [(1, 3, 2), (255, 129, 5), (300, 7, 11)])
+def test_laplacian_pallas_xla_parity_odd_shapes_f32(ma, mb, f):
+    rng = np.random.default_rng(1000 * ma + mb)
+    xa = jnp.asarray(rng.normal(size=(ma, f)), jnp.float32)
+    xb = jnp.asarray(rng.normal(size=(mb, f)), jnp.float32)
+    for h in (0.7, 3.0):
+        out = laplacian_block(xa, xb, h, interpret=True)
+        ref = laplacian_block_xla(xa, xb, h)
+        assert out.shape == (ma, mb)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("ma,mb,f", [(1, 3, 2), (255, 129, 5), (300, 7, 11)])
+def test_laplacian_pallas_xla_parity_odd_shapes_bf16(ma, mb, f):
+    rng = np.random.default_rng(2000 * ma + mb)
+    xa = jnp.asarray(rng.normal(size=(ma, f)), jnp.bfloat16)
+    xb = jnp.asarray(rng.normal(size=(mb, f)), jnp.bfloat16)
+    out = laplacian_block(xa, xb, 1.0, interpret=True)
+    ref = laplacian_block_xla(
+        xa.astype(jnp.float32), xb.astype(jnp.float32), 1.0)
+    assert out.shape == (ma, mb)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=0.05, atol=0.05)
+
+
+def _xla_block(name, xc, xp, h):
+    if name == "gaussian":
+        return gaussian_block_xla(xc, xp, h)
+    return laplacian_block_xla(xc, xp, h)
+
+
+@pytest.mark.parametrize("kernel_name", ["gaussian", "laplacian"])
+@pytest.mark.parametrize("adaptive", [False, True])
+@pytest.mark.parametrize("b,m,s,f,k", [
+    (3, 50, 37, 5, 12),     # odd everything
+    (1, 7, 3, 2, 3),        # tiny, k > s
+    (4, 129, 65, 11, 16),   # crosses the 128-lane boundary
+])
+def test_fused_assemble_id_matches_xla_reference(
+        kernel_name, adaptive, b, m, s, f, k):
+    """Fused Pallas assemble+CPQR == XLA assemble + idqr row ID: exact pivots
+    (greedy CPQR is deterministic on non-degenerate random blocks), matching
+    interpolation matrices and detected ranks."""
+    rng = np.random.default_rng(b * m + s + k)
+    xc = jnp.asarray(rng.normal(size=(b, m, f)), jnp.float32)
+    xp = jnp.asarray(rng.normal(size=(b, s, f)), jnp.float32)
+    h, rtol = 1.3, 1e-5
+    piv, pmat, ranks = cops.batched_assemble_id(
+        xc, xp, k, kernel_name=kernel_name, h=h, rtol=rtol,
+        adaptive=adaptive, interpret=True)
+    assert piv.shape == (b, k) and pmat.shape == (b, m, k)
+    for i in range(b):
+        blk = _xla_block(kernel_name, xc[i], xp[i], h)
+        if adaptive:
+            piv_ref, p_ref, rk_ref = idqr.row_interp_decomp_ranked(
+                blk, k, rtol)
+            assert int(ranks[i]) == int(rk_ref)
+        else:
+            piv_ref, p_ref = idqr.row_interp_decomp(blk, k)
+            assert int(ranks[i]) == k
+        np.testing.assert_array_equal(np.asarray(piv[i]), np.asarray(piv_ref))
+        np.testing.assert_allclose(np.asarray(pmat[i]), np.asarray(p_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("kernel_name", ["gaussian", "laplacian"])
+def test_fused_assemble_id_bf16(kernel_name):
+    """bf16 inputs: the fused kernel upcasts on load and runs the whole
+    assemble+deflation state in f32, so it must agree with the f32 XLA
+    reference of the SAME (bf16-rounded) points to bf16 tolerance."""
+    rng = np.random.default_rng(7)
+    b, m, s, f, k = 2, 40, 24, 6, 8
+    xc = jnp.asarray(rng.normal(size=(b, m, f)), jnp.bfloat16)
+    xp = jnp.asarray(rng.normal(size=(b, s, f)), jnp.bfloat16)
+    piv, pmat, _ = cops.batched_assemble_id(
+        xc, xp, k, kernel_name=kernel_name, h=1.0, rtol=1e-5,
+        adaptive=False, interpret=True)
+    assert pmat.dtype == jnp.bfloat16
+    for i in range(b):
+        blk = _xla_block(kernel_name, xc[i].astype(jnp.float32),
+                         xp[i].astype(jnp.float32), 1.0)
+        piv_ref, p_ref = idqr.row_interp_decomp(blk, k)
+        np.testing.assert_array_equal(np.asarray(piv[i]), np.asarray(piv_ref))
+        np.testing.assert_allclose(
+            np.asarray(pmat[i], np.float32), np.asarray(p_ref),
+            rtol=0.05, atol=0.05)
+
+
+def test_fused_assemble_id_respects_cmask():
+    """Masked-out candidate rows must never be selected as pivots and must
+    get zero interpolation weight — same contract as the XLA adaptive path."""
+    rng = np.random.default_rng(11)
+    b, m, s, f, k = 2, 30, 20, 4, 6
+    xc = jnp.asarray(rng.normal(size=(b, m, f)), jnp.float32)
+    xp = jnp.asarray(rng.normal(size=(b, s, f)), jnp.float32)
+    dead = jnp.asarray(np.arange(m) >= 20, bool)        # last 10 rows dead
+    cmask = jnp.where(dead, 0.0, 1.0)[None, :].repeat(b, axis=0)
+    piv, pmat, ranks = cops.batched_assemble_id(
+        xc, xp, k, kernel_name="gaussian", h=1.0, rtol=1e-4,
+        adaptive=True, cmask=cmask, interpret=True)
+    assert int(jnp.max(piv)) < 20
+    # Dead rows: zero interpolation weights.
+    np.testing.assert_allclose(np.asarray(pmat[:, 20:, :]), 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("kernel_name", ["gaussian", "laplacian"])
+@pytest.mark.parametrize("rtol", [None, 1e-2])
+def test_compress_pallas_matches_xla_end_to_end(kernel_name, rtol):
+    """Whole-build parity: same skeletons, same ranks, matvec-level
+    agreement between impl='xla' and impl='pallas_interpret'."""
+    from repro.core import compression as comp
+    from repro.core.tree import build_tree
+
+    rng = np.random.default_rng(17)
+    n, m = 256, 32
+    x = rng.normal(size=(n, 5)).astype(np.float32)
+    tree = build_tree(x, leaf_size=m)
+    xp = jnp.asarray(x[tree.perm])
+    params = comp.CompressionParams(rank=16, n_near=16, n_far=16, rtol=rtol)
+    hx = comp.compress(xp, tree, KernelSpec(name=kernel_name, h=1.5,
+                                            impl="xla"), params)
+    hp = comp.compress(xp, tree, KernelSpec(name=kernel_name, h=1.5,
+                                            impl="pallas_interpret"), params)
+    np.testing.assert_array_equal(np.asarray(hx.skel_leaf),
+                                  np.asarray(hp.skel_leaf))
+    for sx, sp in zip(hx.skels, hp.skels):
+        np.testing.assert_array_equal(np.asarray(sx), np.asarray(sp))
+    v = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    ref = hx.matmat(v)
+    out = hp.matmat(v)
+    scale = float(jnp.max(jnp.abs(ref)))
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-3 * scale

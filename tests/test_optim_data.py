@@ -123,10 +123,11 @@ def test_laplacian_kernel_svm():
     assert acc > 0.9
 
 
-def test_laplacian_pallas_impl_warns_and_falls_back():
-    """Pins kernel_block's laplacian+pallas behavior: an explicit
-    RuntimeWarning (previously the impl was silently ignored) and the XLA
-    result; unknown impl strings raise instead of silently running XLA."""
+def test_laplacian_pallas_impl_dispatches_without_warning():
+    """Pins kernel_block's laplacian+pallas behavior: the request now
+    dispatches to the real Pallas laplacian kernel (repro.kernels.compress)
+    with NO warning (it used to warn-and-fall-back), matches the XLA path,
+    and unknown impl strings still raise instead of silently running XLA."""
     import warnings
 
     import pytest
@@ -137,13 +138,15 @@ def test_laplacian_pallas_impl_warns_and_falls_back():
     rng = np.random.default_rng(11)
     xa = jnp.asarray(rng.normal(size=(12, 4)), jnp.float32)
     xb = jnp.asarray(rng.normal(size=(9, 4)), jnp.float32)
-    with pytest.warns(RuntimeWarning, match="no Pallas implementation"):
-        out = kernel_block(KernelSpec(name="laplacian", impl="pallas", h=1.3),
-                           xa, xb)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        out = kernel_block(
+            KernelSpec(name="laplacian", impl="pallas_interpret", h=1.3),
+            xa, xb)
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(laplacian_block_xla(xa, xb, 1.3)),
         rtol=1e-6, atol=1e-6)
-    # the xla path must NOT warn
+    # the xla path must not warn either
     with warnings.catch_warnings():
         warnings.simplefilter("error")
         kernel_block(KernelSpec(name="laplacian", impl="xla", h=1.3), xa, xb)

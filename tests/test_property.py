@@ -310,3 +310,51 @@ def test_property_moe_capacity_drop_bounded():
         n_big = float(jnp.linalg.norm(out_big))
         assert n_small <= n_big * 1.05 + 1e-6
         assert jnp.all(jnp.isfinite(out_small))
+
+
+def test_property_kernel_eval_count_matches_instrumentation():
+    """``kernel_eval_count`` (the bench's perf-trajectory denominator) must
+    EXACTLY equal a counting-kernel instrumentation of ``compress`` across
+    random trees/params — and the fused Pallas path must leave the count
+    unchanged (it dispatches at the same seam, after the count is taken)."""
+    for case in pt.Cases(n_cases=5, seed=13).draw(dict(
+            levels=pt.ints(1, 3), leaf=pt.choice(8, 16, 32),
+            rank=pt.ints(4, 24), n_near=pt.ints(4, 24),
+            n_far=pt.ints(4, 24), seed=pt.ints(0, 99),
+            rtol=pt.choice(None, 1e-2),
+            name=pt.choice("gaussian", "laplacian"))):
+        rng = np.random.default_rng(case["seed"])
+        n = case["leaf"] * 2 ** case["levels"]
+        x = rng.normal(size=(n, 3)).astype(np.float32)
+        t = tree_mod.build_tree(x, leaf_size=case["leaf"])
+        xp = jnp.asarray(x[t.perm])
+        params = compression.CompressionParams(
+            rank=case["rank"], n_near=min(case["n_near"], n - case["leaf"]),
+            n_far=case["n_far"], rtol=case["rtol"])
+        spec = KernelSpec(name=case["name"], h=1.0)
+        with compression.counting_kernel_evals() as ctr:
+            compression.compress(xp, t, spec, params)
+        pred = compression.kernel_eval_count(t, params)
+        assert ctr["count"] == pred, (case, ctr["count"], pred)
+
+
+def test_property_pallas_path_kernel_eval_count_unchanged():
+    """impl='pallas_interpret' counts the SAME logical kernel evaluations as
+    impl='xla' (tiny sizes — interpret mode is slow)."""
+    for case in pt.Cases(n_cases=2, seed=14).draw(dict(
+            seed=pt.ints(0, 99), name=pt.choice("gaussian", "laplacian"))):
+        rng = np.random.default_rng(case["seed"])
+        n, leaf = 64, 16
+        x = rng.normal(size=(n, 3)).astype(np.float32)
+        t = tree_mod.build_tree(x, leaf_size=leaf)
+        xp = jnp.asarray(x[t.perm])
+        params = compression.CompressionParams(rank=8, n_near=8, n_far=8)
+        counts = {}
+        for impl in ("xla", "pallas_interpret"):
+            spec = KernelSpec(name=case["name"], h=1.0, impl=impl)
+            with compression.counting_kernel_evals() as ctr:
+                compression.compress(xp, t, spec, params)
+            counts[impl] = ctr["count"]
+        pred = compression.kernel_eval_count(t, params)
+        assert counts["xla"] == counts["pallas_interpret"] == pred, (
+            case, counts, pred)
