@@ -18,8 +18,15 @@ STEADY-STATE (the bench warms up each shape before timing and reports the
 one-off compile cost separately as ``*_cold_s``), so the factor/floor can
 be much tighter than when compile time was folded in.
 
+Unlike wall times, ``peak_stream_bytes`` on the streamed out-of-core cases
+gets a HARD gate: the whole point of the streamed build is a device
+footprint bounded by the batch size, so a fresh run whose peak exceeds
+--peak-factor (default 1.5×) of the committed reference FAILS — that is a
+real memory regression (a batch that stopped being freed, an accidental
+full-array materialization), not host timing noise.
+
 Usage: python ci/check_bench.py REF.json NEW.json [--tol 0.02]
-       [--time-factor 1.5] [--time-floor 0.02]
+       [--time-factor 1.5] [--time-floor 0.02] [--peak-factor 1.5]
 """
 from __future__ import annotations
 
@@ -47,6 +54,10 @@ def main() -> int:
     ap.add_argument("--time-floor", type=float, default=0.02,
                     help="ignore stage times below this many seconds in the "
                          "reference (timing noise, default 0.02)")
+    ap.add_argument("--peak-factor", type=float, default=1.5,
+                    help="FAIL when peak_stream_bytes on a streamed case "
+                         "exceeds this factor of the reference "
+                         "(default 1.5)")
     args = ap.parse_args()
 
     ref, new = load_cases(args.ref), load_cases(args.new)
@@ -89,9 +100,21 @@ def main() -> int:
                       f"{t_ref:.3f}s -> {t_new:.3f}s "
                       f"({t_new / max(t_ref, 1e-9):.1f}x > "
                       f"{args.time_factor:.1f}x, warn-only)")
+        # HARD gate on the streamed build's device footprint: peak batch
+        # bytes are a deterministic function of batch_leaves, the proxy
+        # sizes and the (seeded) adaptive ranks — growth beyond the factor
+        # means the out-of-core walk started materializing something big.
+        p_ref = ref[case].get("peak_stream_bytes")
+        p_new = new[case].get("peak_stream_bytes")
+        if p_ref and p_new and p_new > args.peak_factor * p_ref:
+            failures.append(case)
+            print(f"check_bench: FAIL {case}: peak_stream_bytes "
+                  f"{p_ref} -> {p_new} "
+                  f"({p_new / p_ref:.2f}x > {args.peak_factor:.1f}x)")
     if failures:
-        print(f"check_bench: {len(failures)}/{len(shared)} cases dropped "
-              f"more than {args.tol} accuracy: {', '.join(failures)}")
+        print(f"check_bench: {len(failures)}/{len(shared)} cases failed "
+              f"(accuracy drop > {args.tol} or peak-byte regression > "
+              f"{args.peak_factor}x): {', '.join(failures)}")
         return 1
     print(f"check_bench: {len(shared)} cases within {args.tol} of reference"
           + (f" ({n_warn} wall-time warnings)" if n_warn else ""))

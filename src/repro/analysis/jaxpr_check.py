@@ -15,6 +15,10 @@ asserts whole-program facts no syntactic rule can prove:
   * **one-compile-per-sweep** — a warm-started 4-point C-grid on the
     engine triggers exactly ONE compilation of the ADMM run (the traced
     scalar-knob convention: knobs enter as ``jnp.asarray(c, f32)``);
+  * **streamed-stage purity** — the per-batch stage functions of the
+    out-of-core ``compress_streamed`` walk are callback-free and
+    f32-accumulating in both fixed-rank and adaptive modes (the host
+    orchestrates BETWEEN batches; nothing may call back DURING one);
   * **mesh-placement** — under a multi-device mesh, the compressed /
     factorized artifacts land exactly where ``dist.api
     .node_partition_spec`` says, and the matmat/solve jaxprs pin their
@@ -251,6 +255,49 @@ def check_compress_kernels() -> list[Finding]:
     return findings
 
 
+def check_streamed_stage() -> list[Finding]:
+    """Trace the streamed out-of-core compression stages and assert no host
+    callbacks and no sub-f32 accumulation.
+
+    ``compress_streamed`` is host-orchestrated on purpose (batch slicing,
+    checkpointing and skeleton bookkeeping run in numpy), but each batch
+    dispatches to the three pure stage functions traced here — a callback
+    smuggled into one of them would serialize every batch of a paper-scale
+    build on the host.  Probed in f32 (the streamed path computes in the
+    input dtype; bf16 storage is a factorization-layer concern), in both
+    fixed-rank and adaptive modes, so the rank-masked candidate branch is
+    covered too.
+    """
+    from repro.core import compression as comp
+    from repro.core.kernelfn import KernelSpec
+
+    spec = KernelSpec(h=1.0)
+    b, m, f, r0, nf = 2, 32, 4, 8, 12
+    xl = jnp.zeros((b, m, f), jnp.float32)
+    xp_leaf = jnp.zeros((b, m + nf, f), jnp.float32)
+    cp = jnp.zeros((b, 2 * r0, f), jnp.float32)
+    xp_lvl = jnp.zeros((b, 2 * r0 + nf, f), jnp.float32)
+    cm = jnp.ones((b, 2 * r0), jnp.float32)
+    findings = []
+    for adaptive in (False, True):
+        tag = "adaptive" if adaptive else "fixed"
+        rtol = 1e-4 if adaptive else None
+        findings += _check_traced(
+            f"stream_leaf_batch[{tag}]",
+            jax.make_jaxpr(lambda a, p: comp._stream_leaf_batch(
+                spec, a, p, r0, rtol, adaptive))(xl, xp_leaf))
+        findings += _check_traced(
+            f"stream_level_batch[{tag}]",
+            jax.make_jaxpr(lambda c, p, k: comp._stream_level_batch(
+                spec, c, p, k if adaptive else None, r0, rtol,
+                adaptive))(cp, xp_lvl, cm))
+        findings += _check_traced(
+            f"stream_root_batch[{tag}]",
+            jax.make_jaxpr(lambda c, k: comp._stream_root_batch(
+                spec, c, k if adaptive else None, adaptive))(cp, cm))
+    return findings
+
+
 def check_recompile_engine(c_grid=(0.5, 1.0, 2.0, 4.0)) -> list[Finding]:
     """A warm-started C-sweep on the engine must compile the ADMM run
     exactly once (PR 5's traced-scalar knob convention, end to end)."""
@@ -372,6 +419,7 @@ def run_all() -> list[Finding]:
     findings = []
     findings += check_hot_paths()
     findings += check_compress_kernels()
+    findings += check_streamed_stage()
     findings += check_recompile_engine()
     findings += check_mesh_placement()
     # informational skips are not failures

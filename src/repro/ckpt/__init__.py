@@ -1,6 +1,8 @@
 """Checkpointing: manifest + per-leaf shard files, async save, elastic reshard."""
 
-from repro.ckpt.checkpoint import (CheckpointManager, load_checkpoint,
+from repro.ckpt.checkpoint import (CheckpointManager, latest_step,
+                                   load_checkpoint, load_checkpoint_arrays,
                                    save_checkpoint)
 
-__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]
+__all__ = ["CheckpointManager", "latest_step", "load_checkpoint",
+           "load_checkpoint_arrays", "save_checkpoint"]

@@ -96,6 +96,35 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def _resolve_step(directory: str, step: int | None) -> tuple[str, dict]:
+    """Locate a checkpoint directory (latest when step is None) and load its
+    manifest."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    manifest["step"] = step
+    return path, manifest
+
+
+def _read_leaf(path: str, name: str, meta: dict) -> np.ndarray:
+    """Reassemble one leaf from its shard files as a host numpy array."""
+    import ml_dtypes  # noqa: F401 — registers bfloat16 et al. with numpy
+
+    dtype = np.dtype(meta["dtype"])
+    pieces = []
+    for i in range(meta["shards"]):
+        with open(os.path.join(path, f"{name}.{i}.npz"), "rb") as f:
+            raw = _decompress(f.read())
+        pieces.append(np.frombuffer(raw, dtype=dtype).reshape(
+            meta["shard_shapes"][i]))
+    arr = np.concatenate(pieces, axis=0) if len(pieces) > 1 else pieces[0]
+    return arr.reshape(meta["shape"])
+
+
 def load_checkpoint(directory: str, template: PyTree, step: int | None = None,
                     shardings: PyTree | None = None) -> tuple[PyTree, int]:
     """Restore onto the CURRENT mesh (elastic: any device count/layout).
@@ -104,36 +133,35 @@ def load_checkpoint(directory: str, template: PyTree, step: int | None = None,
     matching pytree of NamedSharding) places each leaf — this is the
     elastic-rescale path: the checkpoint's own mesh is irrelevant.
     """
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {directory}")
-    path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-
+    path, manifest = _resolve_step(directory, step)
     leaves_tpl, treedef = jax.tree_util.tree_flatten_with_path(template)
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(leaves_tpl))
     out = []
-    import ml_dtypes  # noqa: F401 — registers bfloat16 et al. with numpy
-
     for (pth, tpl), sh in zip(leaves_tpl, shard_leaves):
-        name = _path_str(pth)
-        meta = manifest["leaves"][name]
-        dtype = np.dtype(meta["dtype"])
-        pieces = []
-        for i in range(meta["shards"]):
-            with open(os.path.join(path, f"{name}.{i}.npz"), "rb") as f:
-                raw = _decompress(f.read())
-            pieces.append(np.frombuffer(raw, dtype=dtype).reshape(
-                meta["shard_shapes"][i]))
-        arr = np.concatenate(pieces, axis=0) if len(pieces) > 1 else pieces[0]
-        arr = arr.reshape(meta["shape"])
+        arr = _read_leaf(path, _path_str(pth), manifest["leaves"][_path_str(pth)])
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(template), out), step
+        jax.tree_util.tree_structure(template), out), manifest["step"]
+
+
+def load_checkpoint_arrays(
+    directory: str, step: int | None = None
+) -> tuple[dict[str, np.ndarray], int, dict]:
+    """Template-free restore: every saved leaf as a HOST numpy array.
+
+    The manifest already records each leaf's path string, shape and dtype,
+    so flat-dict states (e.g. the streamed HSS build's per-level host
+    accumulators) can round-trip without the caller reconstructing a
+    template pytree — and without touching a device.  Returns
+    ``(arrays, step, extra)`` with ``extra`` the metadata dict passed to
+    ``save_checkpoint`` (the streamed build keeps its fingerprint there).
+    """
+    path, manifest = _resolve_step(directory, step)
+    arrays = {name: _read_leaf(path, name, meta)
+              for name, meta in manifest["leaves"].items()}
+    return arrays, manifest["step"], manifest.get("extra", {})
 
 
 class CheckpointManager:

@@ -92,6 +92,34 @@ class ADMMTrace(NamedTuple):
     dual_res: Array     # (max_it, k)  beta * ||z - z_prev|| per iteration
     iters_run: Array    # (k,) int32   iterations before the tol freeze
                         # (= max_it when tol is None / never reached)
+    done: Array | None = None   # (k,) bool final freeze mask (tol runs only)
+                                # — lets chunked outer loops (adaptive ρ)
+                                # carry the freeze state across calls
+
+
+@dataclasses.dataclass(frozen=True)
+class ADMMParams:
+    """Iteration-control bundle for engine-level ADMM runs.
+
+    ``max_it``/``tol`` are the knobs the engine already exposes.  The rest
+    switch on residual-balancing adaptive ρ (Boyd §3.4.1, default OFF to
+    keep the committed golden pins bit-stable): the run is chunked into
+    ``rho_every``-iteration pieces, and between chunks the penalty β is
+    multiplied by ``rho_tau`` when the primal residual exceeds ``rho_mu``
+    times the dual residual (divided when the imbalance is the other way).
+    β is ALSO the factorization shift here — S(K+βI)S — so every rescale
+    implies a refactorization of K̃ + βI; the caller owns that (it is cheap
+    next to compression and the engine caches one factorization per visited
+    β), and ``rho_max_updates`` caps how many times it can happen.
+    """
+
+    max_it: int = 10
+    tol: float | None = None
+    adapt_rho: bool = False
+    rho_every: int = 5
+    rho_mu: float = 10.0
+    rho_tau: float = 2.0
+    rho_max_updates: int = 4
 
 
 def box_matrix(bound: Array | float, d: int, k: int, dtype) -> Array:
@@ -132,6 +160,7 @@ def admm_boxqp(
     z0: Array | None = None,
     mu0: Array | None = None,
     use_fused_update: bool = False,
+    done0: Array | None = None,
 ) -> tuple[ADMMState, ADMMTrace]:
     """Run k box-QP ADMM problems that share one (K̃ + βI) factorization.
 
@@ -148,7 +177,9 @@ def admm_boxqp(
     (Boyd §3.3.1: ‖x−z‖ < tol·(1+max(‖x‖,‖z‖)) and β‖Δz‖ < tol·(1+‖μ‖)) —
     its iterates freeze at the stopping iterate (the paper's stopping rule
     inside the fixed-length scan) and ``trace.iters_run`` reports how many
-    live iterations it ran.
+    live iterations it ran.  ``done0`` seeds the freeze mask, so a chunked
+    outer loop (``adaptive_rho_outer``) can carry it across calls without
+    re-running finished problems.
     ``use_fused_update`` routes the elementwise z/μ step through the Pallas
     kernel (repro.kernels.admm_update) on the flattened (d·k,) block — only
     valid for γ=0, lo=0 tasks (the SVM instance).
@@ -256,11 +287,100 @@ def admm_boxqp(
         final, (primal, dual) = jax.lax.scan(step, init_state, None,
                                              length=max_it)
         iters_run = jnp.full((k,), max_it, jnp.int32)
+        done_out = None
     else:
-        carry = (init_state, jnp.zeros((k,), bool), jnp.zeros((k,), jnp.int32))
-        (final, _done, iters_run), (primal, dual) = jax.lax.scan(
+        d_init = jnp.zeros((k,), bool) if done0 is None else done0
+        carry = (init_state, d_init, jnp.zeros((k,), jnp.int32))
+        (final, done_out, iters_run), (primal, dual) = jax.lax.scan(
             step, carry, None, length=max_it)
-    return final, ADMMTrace(primal, dual, iters_run)
+    return final, ADMMTrace(primal, dual, iters_run, done_out)
+
+
+def adaptive_rho_outer(
+    run_chunk: Callable,
+    beta0: float,
+    params: ADMMParams,
+    z0: Array | None = None,
+    mu0: Array | None = None,
+) -> tuple[ADMMState, ADMMTrace, dict]:
+    """Residual-balancing ρ (Boyd §3.4.1) as a host loop of scan chunks.
+
+    ``run_chunk(beta, n_it, z0, mu0, done0) -> (ADMMState, ADMMTrace)`` runs
+    ``n_it`` iterations at penalty β — the caller owns the factorization of
+    K̃ + βI a rescale implies (the engine passes a jitted chunk that takes
+    the factorization as a pytree argument, so chunks never recompile across
+    β values).  Between chunks the last live residuals are balanced:
+    primal > ρ_μ·dual ⟹ β ← τβ, dual > ρ_μ·primal ⟹ β ← β/τ, at most
+    ``rho_max_updates`` times.  The UNSCALED multiplier μ is carried across
+    a rescale — it is the β-invariant quantity (Boyd eq. 3.14 rescales the
+    scaled u = μ/β; μ itself is unchanged) — and the freeze mask is reset
+    because the relative stopping test moves with β.
+
+    Returns (state, trace, info): ``trace.iters_run`` sums LIVE iterations
+    across chunks, the residual traces are the chunks concatenated, and
+    ``info`` records the final β and the rescale count.
+    """
+    z, mu, done = z0, mu0, None
+    beta = float(beta0)
+    it_left = int(params.max_it)
+    rescales = 0
+    iters_total = None
+    state = None
+    prs: list[Array] = []
+    drs: list[Array] = []
+    while it_left > 0:
+        n_it = min(params.rho_every, it_left) if params.adapt_rho else it_left
+        state, trace = run_chunk(beta, n_it, z, mu, done)
+        z, mu, done = state.z, state.mu, trace.done
+        iters_total = (trace.iters_run if iters_total is None
+                       else iters_total + trace.iters_run)
+        prs.append(trace.primal_res)
+        drs.append(trace.dual_res)
+        it_left -= n_it
+        if done is not None and bool(jnp.all(done)):
+            break
+        if (params.adapt_rho and it_left > 0
+                and rescales < params.rho_max_updates):
+            pr, dr = trace.primal_res[-1], trace.dual_res[-1]
+            if done is not None:      # balance on LIVE problems only
+                pr = jnp.where(done, 0.0, pr)
+                dr = jnp.where(done, 0.0, dr)
+            p, d = float(jnp.max(pr)), float(jnp.max(dr))
+            new_beta = beta
+            if p > params.rho_mu * d:
+                new_beta = beta * params.rho_tau
+            elif d > params.rho_mu * p:
+                new_beta = beta / params.rho_tau
+            if new_beta != beta:
+                beta = new_beta
+                rescales += 1
+                done = None
+    trace = ADMMTrace(jnp.concatenate(prs), jnp.concatenate(drs),
+                      iters_total, done)
+    return state, trace, dict(beta=beta, rescales=rescales)
+
+
+def admm_boxqp_adaptive(
+    solver_for: Callable[[float], SolverMat],
+    task: BoxQPTask,
+    beta0: float,
+    params: ADMMParams,
+    z0: Array | None = None,
+    mu0: Array | None = None,
+) -> tuple[ADMMState, ADMMTrace, dict]:
+    """:func:`admm_boxqp` under the residual-balancing outer loop.
+
+    ``solver_for(beta)`` must return a (d, k)-block solver for (K̃ + βI) —
+    with the HSS machinery that is ``factorization.factorize(hss, beta)
+    .solve_mat``, and callers should cache it per visited β (the engine
+    does).  With ``params.adapt_rho`` False this is a single plain
+    ``admm_boxqp`` run (plus the info dict).
+    """
+    def run_chunk(beta, n_it, z, mu, done):
+        return admm_boxqp(solver_for(beta), task, beta, max_it=n_it,
+                          tol=params.tol, z0=z, mu0=mu, done0=done)
+
+    return adaptive_rho_outer(run_chunk, beta0, params, z0=z0, mu0=mu0)
 
 
 def admm_svm(
@@ -292,7 +412,8 @@ def admm_svm(
     )
     return (ADMMState(*(a[:, 0] for a in state)),
             ADMMTrace(trace.primal_res[:, 0], trace.dual_res[:, 0],
-                      trace.iters_run[0]))
+                      trace.iters_run[0],
+                      None if trace.done is None else trace.done[0]))
 
 
 def admm_svm_batched(

@@ -309,7 +309,10 @@ def compress(
     """Build the HSS approximation of K(x_perm, x_perm).
 
     ``x_perm`` must already be in tree (leaf-major) order:
-    ``x_perm = x[tree.perm]``.
+    ``x_perm = x[tree.perm]``.  A host numpy array is accepted directly —
+    the host copy the proxy preprocessing needs anyway — so callers that
+    already hold the data on the host (``compress_sharded``'s fallback, the
+    engine) never pay a device round-trip for it.
     """
     n, m, K = tree.n, tree.leaf_size, tree.levels
     n_leaf = 2 ** K
@@ -319,7 +322,14 @@ def compress(
     adaptive, rtol = params.rtol is not None, params.rtol
 
     far_idx = [jnp.asarray(a) for a in _host_proxy_indices(tree, params)]
-    x_host = np.asarray(jax.device_get(x_perm))
+    if isinstance(x_perm, np.ndarray):
+        # Already on the host: use it as-is for the KD-tree preprocessing.
+        # (Wrapping it in jnp.asarray first and gathering it back — the old
+        # fallback behaviour — kept TWO full copies of the dataset alive.)
+        x_host = x_perm
+        x_perm = jnp.asarray(x_host)
+    else:
+        x_host = np.asarray(jax.device_get(x_perm))
     leaf_near = jnp.asarray(_host_leaf_near(tree, params, x_host))
 
     x_leaves = x_perm.reshape(n_leaf, m, -1)
@@ -447,7 +457,9 @@ def compress_sharded(
         raise ValueError(f"x has {x_host.shape[0]} rows, tree expects {n}")
     nodes, ndev = _mesh_nodes(mesh)
     if K == 0 or n_leaf % ndev != 0:
-        return compress(jnp.asarray(x_host), tree, spec, params)
+        # compress() takes host arrays directly — re-wrapping x_host in a
+        # device array here would pay the host->device copy a second time.
+        return compress(x_host, tree, spec, params)
 
     r0 = min(params.rank, m)
     adaptive, rtol = params.rtol is not None, params.rtol
@@ -590,6 +602,319 @@ def compress_sharded(
         leaf_ranks=leaf_ranks if adaptive else None,
         level_ranks=tuple(level_ranks) if adaptive else (),
     )
+
+
+# --------------------------------------------------------------------- #
+# streamed (out-of-core) build                                          #
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class StreamParams:
+    """Knobs of the out-of-core streamed build (``compress_streamed``).
+
+    batch_leaves      — nodes processed per device round-trip.  The build's
+                        peak device working set is O(batch·m·(m + n_proxy))
+                        plus the current batch's outputs — independent of N.
+                        Internal levels reuse the same node-batch size
+                        (rounded down to even so the sibling-NEAR exchange
+                        stays batch-local).
+    ckpt_dir          — directory for per-level checkpoints through
+                        ``repro.ckpt``; None disables checkpointing (the
+                        build is then streamed but not restartable).
+    ckpt_every_levels — checkpoint cadence in completed levels (the leaf
+                        stage counts as one level).
+    max_restarts      — in-process restart budget handed to
+                        ``dist.fault.run_resilient``.
+    assemble          — "device" materializes the finished HSS as jax
+                        arrays (mesh-placed when ``mesh`` is given);
+                        "host" leaves the leaves as numpy for callers that
+                        checkpoint or inspect without a device footprint.
+    """
+
+    batch_leaves: int = 64
+    ckpt_dir: str | None = None
+    ckpt_every_levels: int = 1
+    max_restarts: int = 3
+    assemble: str = "device"
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Observability record of one streamed build (bench/CI artifact)."""
+
+    peak_stream_bytes: int = 0      # max over batches of in+out device bytes
+    n_batches: int = 0
+    resumed_level: int | None = None    # completed levels found on disk
+    restarts: int = 0                   # in-process run_resilient restarts
+    checkpointed_levels: int = 0
+
+
+def _stream_leaf_batch(spec, xl, xp, r0, rtol, adaptive):
+    """One node batch of the streamed leaf stage (pure and traceable —
+    repro.analysis traces it to prove the hot loop is callback-free).
+
+    Identical math to the leaf stage of ``compress``: diagonal blocks +
+    proxy-sampled row ID, through the same two eval-counting seams."""
+    d = _batched_kernel_block(spec, xl, xl)
+    piv, u, rks = _batched_row_id(spec, xl, xp, r0, rtol, adaptive)
+    return d, u, piv, rks
+
+
+def _stream_level_batch(spec, cp, xp, cm, rk, rtol, adaptive):
+    """One node batch of a streamed internal level: sibling couplings B +
+    the candidate->proxy row ID.  ``cp`` (b, 2·r_prev, f) candidate points,
+    ``xp`` (b, 2·r_prev + n_far, f) proxy points, ``cm`` candidate liveness
+    (None in fixed-rank mode)."""
+    rp = cp.shape[1] // 2
+    b = _batched_kernel_block(spec, cp[:, :rp], cp[:, rp:])
+    if adaptive:
+        b = _mask_b(b, cm, rp)
+    piv, t, rks = _batched_row_id(
+        spec, cp, xp, rk, rtol, adaptive, cmask=cm if adaptive else None)
+    return b, piv, t, rks
+
+
+def _stream_root_batch(spec, cp, cm, adaptive):
+    """The root level stores only the sibling coupling B."""
+    rp = cp.shape[1] // 2
+    b = _batched_kernel_block(spec, cp[:, :rp], cp[:, rp:])
+    if adaptive:
+        b = _mask_b(b, cm, rp)
+    return b
+
+
+def _device_bytes(*arrays) -> int:
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in arrays)
+
+
+def _stream_fingerprint(n, m, K, spec, params, dtype) -> dict:
+    """Identity of a streamed build — a checkpoint from ANY other problem
+    (different data size, tree, kernel, accuracy knobs, dtype) must never be
+    resumed into this one.  Stored in the checkpoint manifest's ``extra``
+    and compared after a JSON round-trip, so values are plain scalars."""
+    return dict(
+        kind="hss_streamed_build", n=int(n), leaf_size=int(m), levels=int(K),
+        rank=int(params.rank), n_near=int(params.n_near),
+        n_far=int(params.n_far), seed=int(params.seed),
+        rtol=None if params.rtol is None else float(params.rtol),
+        kernel=spec.name, h=float(spec.h), impl=spec.impl,
+        dtype=str(np.dtype(dtype)))
+
+
+def compress_streamed(
+    x_perm,
+    tree: ClusterTree,
+    spec: KernelSpec,
+    params: CompressionParams = CompressionParams(),
+    stream: StreamParams = StreamParams(),
+    mesh=None,
+    on_level=None,
+) -> tuple[HSSMatrix, StreamStats]:
+    """Out-of-core HSS build: the dataset stays on the HOST, the device only
+    ever sees one node batch at a time.
+
+    ``compress`` materializes the full (N, f) dataset plus every per-level
+    array on the device — O(N·f + N·m) resident bytes, the wall at the
+    paper's 10⁵–10⁷ scales.  Here the leaf level is walked in
+    ``stream.batch_leaves``-node batches: per batch, gather the batch's
+    points and proxy points from host numpy, run the SAME fused per-node
+    kernels (``_batched_kernel_block`` / ``_batched_row_id`` — Pallas or
+    XLA per ``spec.impl``), and copy the results back into preallocated
+    host accumulators.  Level transitions carry skeleton POINTS only
+    (gathered per batch from the host by skeleton id), so peak device bytes
+    during the build are O(batch·m·(m + n_proxy)) — independent of N
+    (``StreamStats.peak_stream_bytes`` records the measured max).
+
+    Restartability: with ``stream.ckpt_dir`` set, each completed level's
+    host state is checkpointed through ``repro.ckpt`` and the level loop
+    runs under ``dist.fault.run_resilient`` — an interrupted build (same
+    process via the restart budget, or a fresh call pointed at the same
+    directory) resumes at the last completed level and produces
+    BIT-IDENTICAL output: the state is saved as raw bytes and every level
+    is a deterministic function of it.  A checkpoint whose fingerprint
+    (data size, tree shape, kernel, accuracy knobs, dtype) does not match
+    is ignored, not trusted.
+
+    Numerics: identical sampled blocks and IDs to ``compress`` — the same
+    points reach the same seams in the same order, only the batch axis is
+    tiled — so skeletons match exactly and ``counting_kernel_evals`` counts
+    the same total (batching-independence is property-tested).
+
+    ``x_perm`` should be host numpy in tree order (a jax array is gathered
+    once).  Returns ``(HSSMatrix, StreamStats)``; with ``mesh`` the
+    finished arrays are placed node-sharded so ``factorize_sharded``
+    consumes them directly.
+    """
+    from repro import ckpt
+    from repro.dist.fault import run_resilient
+
+    n, m, K = tree.n, tree.leaf_size, tree.levels
+    n_leaf = 2 ** K
+    if K == 0:
+        raise ValueError("streamed build needs at least one tree level")
+    x_host = (x_perm if isinstance(x_perm, np.ndarray)
+              else np.asarray(jax.device_get(x_perm)))
+    if x_host.shape[0] != n:
+        raise ValueError(f"x has {x_host.shape[0]} rows, tree expects {n}")
+    r0 = min(params.rank, m)
+    adaptive, rtol = params.rtol is not None, params.rtol
+    if stream.assemble not in ("device", "host"):
+        raise ValueError(f"unknown assemble mode {stream.assemble!r}")
+
+    far_idx = _host_proxy_indices(tree, params)          # host, per level
+    leaf_near = _host_leaf_near(tree, params, x_host)
+    prox0 = np.concatenate([leaf_near, far_idx[0]], axis=1)
+    x_leaves = x_host.reshape(n_leaf, m, -1)
+    stats = StreamStats()
+    fp = _stream_fingerprint(n, m, K, spec, params, x_host.dtype)
+
+    def _run_leaves(state: dict) -> dict:
+        bsz = max(1, stream.batch_leaves)
+        d_out = np.empty((n_leaf, m, m), x_host.dtype)
+        u_out = np.empty((n_leaf, m, r0), x_host.dtype)
+        skel_out = np.empty((n_leaf, r0), np.int32)
+        rank_out = np.empty((n_leaf,), np.int32)
+        for s in range(0, n_leaf, bsz):
+            e = min(s + bsz, n_leaf)
+            xl = jnp.asarray(x_leaves[s:e])
+            xp = jnp.asarray(x_host[prox0[s:e]])
+            d, u, piv, rks = _stream_leaf_batch(spec, xl, xp, r0, rtol,
+                                                adaptive)
+            stats.peak_stream_bytes = max(
+                stats.peak_stream_bytes,
+                _device_bytes(xl, xp, d, u, piv, rks))
+            stats.n_batches += 1
+            d_out[s:e] = jax.device_get(d)
+            u_out[s:e] = jax.device_get(u)
+            skel_out[s:e] = (np.asarray(jax.device_get(piv))
+                             + np.arange(s, e, dtype=np.int32)[:, None] * m)
+            rank_out[s:e] = jax.device_get(rks)
+        state = dict(state)
+        state.update(d_leaf=d_out, u_leaf=u_out, skel_leaf=skel_out,
+                     ranks_leaf=rank_out)
+        return state
+
+    def _run_level(state: dict, k: int) -> dict:
+        skel_prev = state["skel_leaf"] if k == 1 else state[f"skel_{k - 1}"]
+        rank_prev = state["ranks_leaf"] if k == 1 else state[f"ranks_{k - 1}"]
+        r_prev = skel_prev.shape[1]
+        n_k = 2 ** (K - k)
+        cand = skel_prev.reshape(n_k, 2 * r_prev)
+        # Host-side candidate liveness, same rule as hss.rank_mask.
+        cm_all = ((np.arange(r_prev)[None, :] < rank_prev[:, None])
+                  .reshape(n_k, 2 * r_prev).astype(x_host.dtype))
+        bsz = max(2, stream.batch_leaves - stream.batch_leaves % 2)
+        state = dict(state)
+        if k == K:                                       # root: B only
+            cp = jnp.asarray(x_host[cand])
+            cm = jnp.asarray(cm_all) if adaptive else None
+            b = _stream_root_batch(spec, cp, cm, adaptive)
+            stats.peak_stream_bytes = max(stats.peak_stream_bytes,
+                                          _device_bytes(cp, b))
+            stats.n_batches += 1
+            state[f"b_{k}"] = np.asarray(jax.device_get(b))
+            return state
+        r_k = min(params.rank, 2 * r_prev)
+        b_out = np.empty((n_k, r_prev, r_prev), x_host.dtype)
+        t_out = np.empty((n_k, 2 * r_prev, r_k), x_host.dtype)
+        skel_out = np.empty((n_k, r_k), np.int32)
+        rank_out = np.empty((n_k,), np.int32)
+        for s in range(0, n_k, bsz):
+            e = min(s + bsz, n_k)                # n_k, bsz even -> e-s even
+            cand_b = cand[s:e]
+            # NEAR proxies: the sibling's candidates, exchanged batch-locally
+            # (batches are even-aligned so both siblings are present).
+            sib = cand_b.reshape(-1, 2, 2 * r_prev)[:, ::-1].reshape(
+                e - s, 2 * r_prev)
+            cp = jnp.asarray(x_host[cand_b])
+            xp = jnp.asarray(np.concatenate(
+                [x_host[sib], x_host[far_idx[k][s:e]]], axis=1))
+            cm = jnp.asarray(cm_all[s:e]) if adaptive else None
+            b, piv, t, rks = _stream_level_batch(spec, cp, xp, cm, r_k,
+                                                 rtol, adaptive)
+            stats.peak_stream_bytes = max(
+                stats.peak_stream_bytes,
+                _device_bytes(cp, xp, b, piv, t, rks))
+            stats.n_batches += 1
+            b_out[s:e] = jax.device_get(b)
+            t_out[s:e] = jax.device_get(t)
+            skel_out[s:e] = np.take_along_axis(
+                cand_b, np.asarray(jax.device_get(piv)), axis=1)
+            rank_out[s:e] = jax.device_get(rks)
+        state.update({f"b_{k}": b_out, f"t_{k}": t_out,
+                      f"skel_{k}": skel_out, f"ranks_{k}": rank_out})
+        return state
+
+    def _step(state: dict, i: int) -> dict:
+        if on_level is not None:
+            on_level(i)
+        return _run_leaves(state) if i == 0 else _run_level(state, i)
+
+    def _save(state: dict, completed: int) -> None:
+        if stream.ckpt_dir is None:
+            return
+        ckpt.save_checkpoint(stream.ckpt_dir, state, completed, extra=fp)
+        stats.checkpointed_levels = completed
+
+    def _restore():
+        if stream.ckpt_dir is None:
+            return None
+        step = ckpt.latest_step(stream.ckpt_dir)
+        if step is None:
+            return None
+        arrays, got, extra = ckpt.load_checkpoint_arrays(
+            stream.ckpt_dir, step)
+        if {key: extra.get(key) for key in fp} != fp:
+            return None                      # someone else's checkpoint
+        stats.resumed_level = got
+        return arrays, got
+
+    state, report = run_resilient(
+        K + 1, dict, _step, _save, _restore,
+        ckpt_every=stream.ckpt_every_levels if stream.ckpt_dir else 0,
+        max_restarts=stream.max_restarts)
+    stats.restarts = report["restarts"]
+
+    # ---------------- assembly ---------------- #
+    if stream.assemble == "host" and mesh is None:
+        def put(a):
+            return a
+        x_out = x_host
+    elif mesh is None:
+        put = jnp.asarray
+        x_out = jnp.asarray(x_host)
+    else:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        nodes, ndev = _mesh_nodes(mesh)
+
+        def put(a):
+            # compress_sharded-compatible placement: node-stacked arrays are
+            # sharded along the node axis when it divides the device count,
+            # tiny upper-tree arrays replicate; factorize_sharded re-pins
+            # everything itself, so this only has to be a sane start.
+            if a.ndim >= 1 and a.shape[0] > 1 and a.shape[0] % ndev == 0:
+                p = PartitionSpec(nodes, *([None] * (a.ndim - 1)))
+            else:
+                p = PartitionSpec()
+            return jax.device_put(a, NamedSharding(mesh, p))
+
+        x_out = put(x_host)
+
+    hss = HSSMatrix(
+        x=x_out,
+        d_leaf=put(state["d_leaf"]),
+        u_leaf=put(state["u_leaf"]),
+        skel_leaf=put(state["skel_leaf"]),
+        transfers=tuple(put(state[f"t_{k}"]) for k in range(1, K)),
+        skels=tuple(put(state[f"skel_{k}"]) for k in range(1, K)),
+        b_mats=tuple(put(state[f"b_{k}"]) for k in range(1, K + 1)),
+        levels=K,
+        leaf_size=m,
+        leaf_ranks=put(state["ranks_leaf"]) if adaptive else None,
+        level_ranks=tuple(put(state[f"ranks_{k}"])
+                          for k in range(1, K)) if adaptive else (),
+    )
+    return hss, stats
 
 
 def compression_error(hss: HSSMatrix, spec: KernelSpec, n_probe: int = 8,

@@ -150,6 +150,15 @@ class HSSSVMEngine:
     ``tol`` enables the paper's residual stopping rule: a problem's ADMM
     updates freeze once max(primal, dual) < tol and ``FitReport.iters_run``
     records the live iteration counts (None = always run ``max_it``).
+
+    ``stream`` switches ``prepare`` to the out-of-core streamed build
+    (``compression.compress_streamed``): the dataset never has to be
+    device-resident during compression, peak device bytes are bounded by
+    ``stream.batch_leaves``, and with ``stream.ckpt_dir`` set an interrupted
+    build resumes at its last completed level.  ``admm`` (an
+    ``ADMMParams``) overrides ``max_it``/``tol`` and can switch on
+    residual-balancing adaptive ρ — each β rescale refactorizes K̃ + βI
+    once, cached per visited β.
     """
 
     spec: KernelSpec
@@ -165,6 +174,8 @@ class HSSSVMEngine:
     task: str = "svm"             # "svm" | "svr" | "oneclass"
     svr_c: float = 1.0            # SVR box bound C (ε is the train knob)
     tol: float | None = None      # ADMM residual early-stop threshold
+    stream: compression.StreamParams | None = None   # out-of-core build
+    admm: admm_mod.ADMMParams | None = None          # iteration control
 
     # populated by prepare():
     _hss: HSSMatrix | None = None
@@ -181,6 +192,13 @@ class HSSSVMEngine:
     # evenly over it (non-power-of-two device count) — then every stage
     # falls back to the local path instead of crashing on placement.
     _mesh: Mesh | None = None
+    # multilevel warm start inputs + adaptive-ρ machinery
+    _x_raw: np.ndarray | None = None
+    _y_raw: np.ndarray | None = None
+    _xp_host: np.ndarray | None = None     # padded+permuted points (host)
+    _maskp_host: np.ndarray | None = None  # (d,) real-point mask (host)
+    _fac_cache: dict | None = None         # beta -> factorization
+    _chunk_fns: dict | None = None         # chunk length -> jitted runner
 
     # ------------------------------------------------------------------ #
     @contextlib.contextmanager
@@ -261,12 +279,16 @@ class HSSSVMEngine:
             ys, pmasks, pairs = build(yp, classes.astype(np.float32), maskp)
 
         t0 = time.perf_counter()
-        if mesh is not None:
+        sstats = None
+        if self.stream is not None:
+            hss, sstats = compression.compress_streamed(
+                xp_host, t, self.spec, self.comp, stream=self.stream,
+                mesh=mesh)
+        elif mesh is not None:
             hss = compression.compress_sharded(
                 xp_host, t, self.spec, self.comp, mesh)
         else:
-            hss = compression.compress(
-                jnp.asarray(xp_host), t, self.spec, self.comp)
+            hss = compression.compress(xp_host, t, self.spec, self.comp)
         # Adaptive builds (comp.rtol set): slice every level down to its
         # observed max rank before factorizing — the factorization and every
         # downstream solve/matmat then run at the detected ranks, mesh
@@ -297,6 +319,11 @@ class HSSSVMEngine:
         self._ys, self._pmask = ys_d, pm_d
         self._classes, self._pairs = classes, pairs
         self._jit_admm = self._jit_bias = None
+        self._x_raw, self._y_raw = x, (None if y is None else np.asarray(y))
+        self._xp_host = xp_host
+        self._maskp_host = maskp.astype(np.float32)
+        self._fac_cache = {float(beta): fac}
+        self._chunk_fns = {}
         self._report = FitReport(
             compression_s=t1 - t0,
             factorization_s=t2 - t1,
@@ -307,6 +334,11 @@ class HSSSVMEngine:
             kernel_evals=compression.kernel_eval_count(t, self.comp),
             **rank_info,
         )
+        if sstats is not None:
+            self._report.peak_stream_bytes = sstats.peak_stream_bytes
+            self._report.stream_batches = sstats.n_batches
+            self._report.stream_resumed_level = sstats.resumed_level
+            self._report.stream_restarts = sstats.restarts
         return self._report
 
     # ------------------------------------------------------------------ #
@@ -361,18 +393,24 @@ class HSSSVMEngine:
             raise ValueError(f"svr needs epsilon >= 0, got {c_value}")
         fac, ys, pmask = self._fac, self._ys, self._pmask
         n_prob, d = ys.shape
+        ap = self.admm
+        eff_max_it = self.max_it if ap is None else ap.max_it
+        eff_tol = self.tol if ap is None else ap.tol
+        adapt = ap is not None and ap.adapt_rho
 
-        if self._jit_admm is None:
-            max_it, tol = self.max_it, self.tol
+        if self._jit_bias is None:
+            if self.task == "svr":
+                self._jit_bias = jax.jit(tasks_mod.compute_bias_svr_batched)
+            elif self.task == "oneclass":
+                self._jit_bias = jax.jit(tasks_mod.compute_rho_oneclass_batched)
+            else:
+                self._jit_bias = jax.jit(compute_bias_batched)
+        if not adapt and self._jit_admm is None:
+            max_it, tol = eff_max_it, eff_tol
             task_name, svr_c = self.task, self.svr_c
 
             def _run(fac_, ys_, pmask_, knob, z0, mu0):
-                if task_name == "svr":
-                    task = tasks_mod.svr_task(ys_, svr_c * pmask_, knob)
-                elif task_name == "oneclass":
-                    task = tasks_mod.one_class_task(pmask_, knob)
-                else:
-                    task = admm_mod.svm_task(ys_, knob * pmask_)
+                task = self._build_task(task_name, svr_c, ys_, pmask_, knob)
                 state, trace = admm_mod.admm_boxqp(
                     fac_.solve_mat, task, fac_.beta, max_it, tol=tol,
                     z0=z0, mu0=mu0)
@@ -383,12 +421,6 @@ class HSSSVMEngine:
                         trace.iters_run)
 
             self._jit_admm = jax.jit(_run)
-            if task_name == "svr":
-                self._jit_bias = jax.jit(tasks_mod.compute_bias_svr_batched)
-            elif task_name == "oneclass":
-                self._jit_bias = jax.jit(tasks_mod.compute_rho_oneclass_batched)
-            else:
-                self._jit_bias = jax.jit(compute_bias_batched)
 
         if self._mesh is None:
             zeros = jnp.zeros((d, n_prob), jnp.float32)
@@ -400,10 +432,15 @@ class HSSSVMEngine:
         z0, mu0 = (zeros, zeros) if warm is None else warm
         knob = jnp.asarray(c_value, jnp.float32)
 
+        rho_info = None
         with self._active():
             t0 = time.perf_counter()
-            z, mu, z_y, hi_mat, iters_run = self._jit_admm(
-                fac, ys, pmask, knob, z0, mu0)
+            if adapt:
+                z, mu, z_y, hi_mat, iters_run, rho_info = \
+                    self._train_adaptive(ap, knob, z0, mu0, n_prob)
+            else:
+                z, mu, z_y, hi_mat, iters_run = self._jit_admm(
+                    fac, ys, pmask, knob, z0, mu0)
             jax.block_until_ready(z)
             t1 = time.perf_counter()
             if self.task == "svr":
@@ -418,6 +455,9 @@ class HSSSVMEngine:
             self._report.admm_s += t1 - t0
             self._report.iters_run = tuple(
                 int(i) for i in np.asarray(iters_run))
+            if rho_info is not None:
+                self._report.rho_final = rho_info["beta"]
+                self._report.rho_rescales = rho_info["rescales"]
 
         model = EngineModel(
             x_perm=self._hss.x, z_y=z_y, biases=biases,
@@ -426,6 +466,152 @@ class HSSSVMEngine:
             pairs=self._pairs, mesh=self._mesh,
         )
         return model, (z, mu)
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _build_task(task_name: str, svr_c: float, ys_, pmask_, knob):
+        """The engine's knob → BoxQPTask rule (shared by both ADMM paths)."""
+        if task_name == "svr":
+            return tasks_mod.svr_task(ys_, svr_c * pmask_, knob)
+        if task_name == "oneclass":
+            return tasks_mod.one_class_task(pmask_, knob)
+        return admm_mod.svm_task(ys_, knob * pmask_)
+
+    def _fac_for(self, beta: float) -> factorization.HSSFactorization:
+        """Factorization of K̃ + βI, cached per visited β.
+
+        The adaptive-ρ rescale path: β is the factorization shift, so a
+        rescale means ONE refactorization (O(N r²) — cheap next to the
+        compression it reuses) the first time each β is visited.
+        """
+        fac = self._fac_cache.get(float(beta))
+        if fac is None:
+            if self._mesh is not None:
+                fac = factorization.factorize_sharded(
+                    self._hss, beta, self._mesh, store_dtype=self.store_dtype)
+            else:
+                fac = factorization.factorize(
+                    self._hss, beta, store_dtype=self.store_dtype)
+            self._fac_cache[float(beta)] = fac
+        return fac
+
+    def _train_adaptive(self, ap: admm_mod.ADMMParams, knob, z0, mu0,
+                        n_prob: int):
+        """Residual-balancing adaptive-ρ run (Boyd §3.4.1).
+
+        The chunk runner is jitted ONCE per chunk length with the
+        factorization as a pytree argument, so β rescales never recompile —
+        they only swap which cached factorization is passed in.
+        """
+        ys, pmask = self._ys, self._pmask
+        task_name, svr_c = self.task, self.svr_c
+
+        def make_chunk(n_it: int):
+            def _chunk(fac_, ys_, pmask_, knob_, z0_, mu0_, done0_):
+                task = self._build_task(task_name, svr_c, ys_, pmask_, knob_)
+                state, trace = admm_mod.admm_boxqp(
+                    fac_.solve_mat, task, fac_.beta, n_it, tol=ap.tol,
+                    z0=z0_, mu0=mu0_, done0=done0_)
+                hi = task.hi if task_name == "oneclass" else ()
+                return state, trace, task.sign * state.z, hi
+            return jax.jit(_chunk)
+
+        last = {}
+
+        def run_chunk(beta, n_it, z, mu, done):
+            fac_b = self._fac_for(beta)
+            fn = self._chunk_fns.get(n_it)
+            if fn is None:
+                fn = self._chunk_fns[n_it] = make_chunk(n_it)
+            done = jnp.zeros((n_prob,), bool) if done is None else done
+            state, trace, z_y, hi = fn(fac_b, ys, pmask, knob, z, mu, done)
+            last["z_y"], last["hi"] = z_y, hi
+            return state, trace
+
+        state, trace, info = admm_mod.adaptive_rho_outer(
+            run_chunk, float(self._fac.beta), ap, z0=z0, mu0=mu0)
+        return (state.z, state.mu, last["z_y"], last["hi"],
+                trace.iters_run, info)
+
+    # ------------------------------------------------------------------ #
+    def train_multilevel(
+        self,
+        c_value: float,
+        coarse_frac: float = 0.125,
+        coarse_comp: compression.CompressionParams | None = None,
+        coarse_leaf_size: int | None = None,
+        seed: int = 0,
+    ) -> tuple[EngineModel, dict]:
+        """AML-SVM-style multilevel warm start (arXiv 2011.02592).
+
+        Train the same task on a ``coarse_frac`` subsample with a CRUDE
+        compression (``CompressionParams.crude`` unless overridden), prolong
+        the coarse duals to the full point set by nearest-neighbour
+        interpolation (``svm.prolong_duals`` over the padded/permuted host
+        points), and let the warm-started early-stopping ADMM finish —
+        ``FitReport.iters_run`` then measures the saved iterations against a
+        cold ``train``.  The subsample is stratified per class for
+        classification so the coarse problem set (OVR columns / OVO pairs)
+        matches the fine one exactly.
+
+        Returns (model, info) with the coarse size and both iteration
+        records.  Requires ``prepare`` to have run (the fine factorization
+        is reused untouched).
+        """
+        from repro.core.svm import prolong_duals
+
+        assert self._fac is not None, "call prepare() first"
+        x, y = self._x_raw, self._y_raw
+        n = x.shape[0]
+        leaf_c = coarse_leaf_size or min(self.leaf_size, 64)
+        n_c = int(max(min(n, 2 * leaf_c), round(n * coarse_frac)))
+        rng = np.random.default_rng(seed)
+        if self.task == "svm":
+            parts = []
+            for cls in self._classes:
+                rows = np.nonzero(y == cls)[0]
+                want = max(1, int(round(len(rows) * n_c / n)))
+                parts.append(rng.choice(rows, size=min(want, len(rows)),
+                                        replace=False))
+            idx = np.sort(np.concatenate(parts))
+        else:
+            idx = np.sort(rng.choice(n, size=min(n_c, n), replace=False))
+
+        coarse = HSSSVMEngine(
+            spec=self.spec,
+            comp=coarse_comp or compression.CompressionParams.crude(),
+            leaf_size=leaf_c, beta=self.beta, max_it=self.max_it,
+            strategy=self.strategy, store_dtype=self.store_dtype,
+            task=self.task, svr_c=self.svr_c, tol=self.tol, admm=self.admm,
+        )
+        y_sub = None if self.task == "oneclass" else y[idx]
+        coarse.prepare(x[idx], y_sub)
+        _, (z_c, mu_c) = coarse.train(c_value)
+
+        scale = tasks_mod.prolong_scale(
+            self.task,
+            int(coarse._maskp_host.sum()), int(self._maskp_host.sum()))
+        z0 = prolong_duals(coarse._xp_host, np.asarray(jax.device_get(z_c)),
+                           self._xp_host) * scale
+        mu0 = prolong_duals(coarse._xp_host, np.asarray(jax.device_get(mu_c)),
+                            self._xp_host) * scale
+        # Fine pads carry no dual mass regardless of what they mapped to.
+        z0 = (z0 * self._maskp_host[:, None]).astype(np.float32)
+        mu0 = (mu0 * self._maskp_host[:, None]).astype(np.float32)
+        if self._mesh is None:
+            warm = (jnp.asarray(z0), jnp.asarray(mu0))
+        else:
+            row_sh = NamedSharding(self._mesh, PartitionSpec(
+                tuple(self._mesh.axis_names), None))
+            warm = (jax.device_put(z0, row_sh), jax.device_put(mu0, row_sh))
+
+        model, _ = self.train(c_value, warm=warm)
+        info = dict(
+            coarse_n=int(idx.shape[0]),
+            coarse_iters_run=coarse.report.iters_run,
+            iters_run=self.report.iters_run,
+        )
+        return model, info
 
     # ------------------------------------------------------------------ #
     def train_grid(self, c_values: Sequence[float], warm_start: bool = True

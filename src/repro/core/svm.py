@@ -79,6 +79,17 @@ class FitReport:
     # per-problem ADMM iterations actually run by the last train() — below
     # max_it when the residual stopping rule (``tol``) froze the iterates
     iters_run: tuple | None = None
+    # streamed-build observability (compression.StreamStats): peak device
+    # bytes of any one batch round-trip — the build's working set, which a
+    # streamed build bounds by batch size instead of O(N·d) — plus the
+    # batch count and resume/restart record
+    peak_stream_bytes: int | None = None
+    stream_batches: int | None = None
+    stream_resumed_level: int | None = None
+    stream_restarts: int | None = None
+    # adaptive-ρ record of the last train(): final β and rescale count
+    rho_final: float | None = None
+    rho_rescales: int | None = None
 
 
 @dataclasses.dataclass
@@ -224,6 +235,28 @@ def compute_bias(hss: HSSMatrix, y: Array, z: Array, c_value: float,
     c_mat = jnp.full((z.shape[0], 1), c_value, z.dtype)
     return compute_bias_batched(
         hss, y[:, None], z[:, None], c_mat, mask[:, None], margin_tol)[0]
+
+
+def prolong_duals(x_coarse: np.ndarray, z_coarse: np.ndarray,
+                  x_fine: np.ndarray) -> np.ndarray:
+    """Nearest-neighbour prolongation of per-point dual columns.
+
+    The AML-SVM multilevel scheme (arXiv 2011.02592): a dual vector trained
+    on a coarse subsample is lifted to the fine set by giving every fine
+    point its nearest coarse point's dual value — support-vector regions
+    stay support-vector regions, so the fine ADMM starts near its fixed
+    point instead of at zero.  ``x_coarse`` (n_c, f) / ``x_fine`` (n_f, f)
+    are point sets (padded, permuted — any consistent order), ``z_coarse``
+    is (n_c,) or (n_c, P); returns the matching (n_f, ...) array.  Distances
+    are ranked in f32 (bf16 inputs are fine); the dual VALUES are copied
+    untouched.  Task-dependent mass rescaling is ``tasks.prolong_scale``.
+    """
+    from scipy.spatial import cKDTree
+
+    xc = np.asarray(x_coarse, np.float32)
+    xf = np.asarray(x_fine, np.float32)
+    _, nn = cKDTree(xc).query(xf, k=1)
+    return np.asarray(z_coarse)[nn]
 
 
 def run_grid_search(

@@ -154,6 +154,22 @@ def compute_rho_oneclass_batched(hss: HSSMatrix, alpha: Array, hi_mat: Array,
     return jnp.where(n_m > 0, rho_margin, rho_sv)
 
 
+def prolong_scale(task: str, n_coarse_real: int, n_fine_real: int) -> float:
+    """Dual rescale factor n_c/n_f for coarse→fine prolongation.
+
+    The decision function f(x) = Σᵢ αᵢ K(xᵢ, x) sums one kernel term per
+    training point, so at a comparable margin the individual duals shrink
+    like 1/n as the training set grows: nearest-neighbour prolongation
+    copies each coarse dual ≈ n_f/n_c times, and without the n_c/n_f
+    rescale the warm start overshoots the fine-level magnitudes by that
+    factor (measurably worse than a cold start for SVC).  For one-class
+    the same factor additionally restores unit mass eᵀα = 1 and maps the
+    coarse box bound 1/(ν·n_c) onto the fine one 1/(ν·n_f).
+    """
+    del task  # the 1/n magnitude argument applies to every box-QP family
+    return float(n_coarse_real) / float(max(n_fine_real, 1))
+
+
 # --------------------------------------------------------------------- #
 # validation metrics + grid drivers (ε / ν sweeps in place of C)        #
 # --------------------------------------------------------------------- #

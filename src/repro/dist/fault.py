@@ -161,10 +161,14 @@ def run_resilient(
         restarts=restarts,
         stragglers=list(guard.stragglers) if guard is not None else [],
     )
-    try:
-        save(state, n_steps)
-    except Exception as e:   # noqa: BLE001 — surfaced, not fatal
-        # the run IS complete; a failed final checkpoint must not discard
-        # the computed state, so it is reported instead of raised
-        report["final_save_error"] = repr(e)
+    # Skip the final save when the periodic cadence already covered step
+    # n_steps — the streamed HSS build checkpoints whole levels, and writing
+    # the complete state twice back-to-back doubles the IO bill for nothing.
+    if not (ckpt_every and n_steps % ckpt_every == 0):
+        try:
+            save(state, n_steps)
+        except Exception as e:   # noqa: BLE001 — surfaced, not fatal
+            # the run IS complete; a failed final checkpoint must not discard
+            # the computed state, so it is reported instead of raised
+            report["final_save_error"] = repr(e)
     return state, report

@@ -128,3 +128,68 @@ def test_paper_beta_rule():
     assert admm_mod.paper_beta(50_000) == 1e2
     assert admm_mod.paper_beta(500_000) == 1e3
     assert admm_mod.paper_beta(3_500_000) == 1e4
+
+
+# --------------------------------------------------------------------- #
+# residual-balancing adaptive rho (Boyd 3.4.1, default OFF)             #
+# --------------------------------------------------------------------- #
+def _adaptive_problem(n=96, seed=7):
+    x, y = make_blobs(n, n_features=2, seed=seed)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    k_mat = gaussian_block_xla(xj, xj, 1.0)
+    task = admm_mod.svm_task(yj[None, :], 1.0)
+    return k_mat, task
+
+
+def test_adaptive_rho_off_matches_plain_boxqp():
+    """adapt_rho=False must be the EXACT plain solver (golden-pin safety):
+    same iterates, same residual trace, beta untouched."""
+    k_mat, task = _adaptive_problem()
+    beta = 10.0
+    solver = _dense_solver(k_mat, beta)
+    state_ref, trace_ref = admm_mod.admm_boxqp(
+        solver, task, beta, max_it=12, tol=1e-3)
+    params = admm_mod.ADMMParams(max_it=12, tol=1e-3, adapt_rho=False)
+    state, trace, info = admm_mod.admm_boxqp_adaptive(
+        lambda b: _dense_solver(k_mat, b), task, beta, params)
+    np.testing.assert_array_equal(np.asarray(state.z), np.asarray(state_ref.z))
+    np.testing.assert_array_equal(np.asarray(trace.iters_run),
+                                  np.asarray(trace_ref.iters_run))
+    np.testing.assert_array_equal(np.asarray(trace.primal_res),
+                                  np.asarray(trace_ref.primal_res))
+    assert info["beta"] == beta and info["rescales"] == 0
+
+
+def test_adaptive_rho_converges_faster_from_bad_beta():
+    """From a badly scaled beta the balanced run must converge within the
+    budget the fixed run exhausts, end at a rescaled beta, and still solve
+    the same QP (matching dual objective to the well-scaled reference)."""
+    k_mat, task = _adaptive_problem()
+    bad_beta, budget = 1e4, 400
+    _, trace_fixed = admm_mod.admm_boxqp(
+        _dense_solver(k_mat, bad_beta), task, bad_beta,
+        max_it=budget, tol=1e-3)
+    params = admm_mod.ADMMParams(max_it=budget, tol=1e-3, adapt_rho=True,
+                                 rho_every=5, rho_max_updates=20)
+    state, trace, info = admm_mod.admm_boxqp_adaptive(
+        lambda b: _dense_solver(k_mat, b), task, bad_beta, params)
+    it_fixed = int(np.max(np.asarray(trace_fixed.iters_run)))
+    it_adapt = int(np.max(np.asarray(trace.iters_run)))
+    assert it_adapt < it_fixed, (it_adapt, it_fixed)
+    assert info["rescales"] > 0 and info["beta"] < bad_beta
+    # solution quality: same dual objective as a long well-scaled run
+    state_ref, _ = admm_mod.admm_boxqp(
+        _dense_solver(k_mat, 1.0), task, 1.0, max_it=2000)
+    y = task.sign[:, 0]
+    f_ref = float(_dual_objective(k_mat, y, state_ref.z[:, 0]))
+    f_ad = float(_dual_objective(k_mat, y, state.z[:, 0]))
+    assert f_ad <= f_ref + 1e-2 * abs(f_ref) + 1e-2, (f_ad, f_ref)
+
+
+def test_adaptive_rho_rescale_cap_respected():
+    k_mat, task = _adaptive_problem()
+    params = admm_mod.ADMMParams(max_it=200, tol=1e-4, adapt_rho=True,
+                                 rho_every=2, rho_max_updates=3)
+    _, _, info = admm_mod.admm_boxqp_adaptive(
+        lambda b: _dense_solver(k_mat, b), task, 1e5, params)
+    assert info["rescales"] <= 3

@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.ckpt.checkpoint import (CheckpointManager, latest_step,
-                                   load_checkpoint, save_checkpoint)
+                                   load_checkpoint, load_checkpoint_arrays,
+                                   save_checkpoint)
 
 
 def _tree(seed=0):
@@ -47,6 +48,28 @@ def test_latest_step_and_retention():
         assert latest_step(d) == 4
         steps = sorted(int(x.split("_")[1]) for x in os.listdir(d))
         assert steps == [3, 4]
+
+
+def test_load_checkpoint_arrays_template_free():
+    """Template-free restore: flat host-numpy dicts (the streamed HSS
+    build's level state) round-trip bit-exactly WITH their extra metadata,
+    without the caller supplying a pytree template or touching a device."""
+    state = {
+        "d_leaf": np.arange(24, dtype=np.float32).reshape(4, 6),
+        "skel": np.arange(8, dtype=np.int32),
+        "ranks": np.asarray([3, 2, 3, 1], np.int32),
+    }
+    fp = dict(kind="hss_streamed_build", n=128, h=1.5)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, state, step=2, n_shards=3, extra=fp)
+        arrays, step, extra = load_checkpoint_arrays(d)
+        assert step == 2
+        assert extra == fp                      # JSON round-trip preserved
+        assert set(arrays) == set(state)
+        for k in state:
+            assert isinstance(arrays[k], np.ndarray)
+            assert arrays[k].dtype == state[k].dtype
+            np.testing.assert_array_equal(arrays[k], state[k])
 
 
 def test_shard_count_independence():

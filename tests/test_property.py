@@ -338,6 +338,31 @@ def test_property_kernel_eval_count_matches_instrumentation():
         assert ctr["count"] == pred, (case, ctr["count"], pred)
 
 
+def test_property_streamed_kernel_eval_count_batching_independent():
+    """The streamed out-of-core build counts the SAME kernel evaluations as
+    ``kernel_eval_count`` predicts (= the resident build) at EVERY batch
+    size — tiling the batch axis must not change what reaches the counting
+    seams, or the bench's perf-trajectory denominator silently forks."""
+    for case in pt.Cases(n_cases=3, seed=15).draw(dict(
+            levels=pt.ints(2, 3), leaf=pt.choice(16, 32),
+            rank=pt.ints(4, 12), seed=pt.ints(0, 99),
+            rtol=pt.choice(None, 1e-2))):
+        rng = np.random.default_rng(case["seed"])
+        n = case["leaf"] * 2 ** case["levels"]
+        x = rng.normal(size=(n, 3)).astype(np.float32)
+        t = tree_mod.build_tree(x, leaf_size=case["leaf"])
+        params = compression.CompressionParams(
+            rank=case["rank"], n_near=8, n_far=8, rtol=case["rtol"])
+        spec = KernelSpec(h=1.0)
+        pred = compression.kernel_eval_count(t, params)
+        for bl in (1, 3, 64):
+            with compression.counting_kernel_evals() as ctr:
+                compression.compress_streamed(
+                    x[t.perm], t, spec, params,
+                    stream=compression.StreamParams(batch_leaves=bl))
+            assert ctr["count"] == pred, (case, bl, ctr["count"], pred)
+
+
 def test_property_pallas_path_kernel_eval_count_unchanged():
     """impl='pallas_interpret' counts the SAME logical kernel evaluations as
     impl='xla' (tiny sizes — interpret mode is slow)."""
