@@ -18,6 +18,14 @@ STEADY-STATE (the bench warms up each shape before timing and reports the
 one-off compile cost separately as ``*_cold_s``), so the factor/floor can
 be much tighter than when compile time was folded in.
 
+The serving-tier records (BENCH_serve.json, ``serve/*`` cases) ride the
+same machinery: their ``accuracy`` field holds the served-vs-trained
+prediction agreement, so serving drift hard-fails exactly like training
+accuracy drift (run with ``--tol 0.005`` — the batched f32 path is
+bit-identical, so any disagreement is a real decode/parity bug), while
+p50/p99 request latencies get the same warn-only >factor treatment as the
+stage wall times (with their own millisecond floor, --latency-floor-ms).
+
 Unlike wall times, ``peak_stream_bytes`` on the streamed out-of-core cases
 gets a HARD gate: the whole point of the streamed build is a device
 footprint bounded by the batch size, so a fresh run whose peak exceeds
@@ -58,6 +66,9 @@ def main() -> int:
                     help="FAIL when peak_stream_bytes on a streamed case "
                          "exceeds this factor of the reference "
                          "(default 1.5)")
+    ap.add_argument("--latency-floor-ms", type=float, default=0.5,
+                    help="ignore serve latencies below this many ms in the "
+                         "reference (default 0.5)")
     args = ap.parse_args()
 
     ref, new = load_cases(args.ref), load_cases(args.new)
@@ -98,6 +109,18 @@ def main() -> int:
                 n_warn += 1
                 print(f"check_bench: WARN {case}: {field} "
                       f"{t_ref:.3f}s -> {t_new:.3f}s "
+                      f"({t_new / max(t_ref, 1e-9):.1f}x > "
+                      f"{args.time_factor:.1f}x, warn-only)")
+        # Warn-only serving-latency regression check (ms-unit fields of the
+        # serve/* cases), same shape as the stage-time warning above.
+        for field in ("p50_ms", "p99_ms", "loop_p50_ms", "loop_p99_ms"):
+            t_ref, t_new = ref[case].get(field), new[case].get(field)
+            if t_ref is None or t_new is None:
+                continue
+            if t_new > args.time_factor * max(t_ref, args.latency_floor_ms):
+                n_warn += 1
+                print(f"check_bench: WARN {case}: {field} "
+                      f"{t_ref:.2f}ms -> {t_new:.2f}ms "
                       f"({t_new / max(t_ref, 1e-9):.1f}x > "
                       f"{args.time_factor:.1f}x, warn-only)")
         # HARD gate on the streamed build's device footprint: peak batch

@@ -16,7 +16,12 @@
 # leaves BENCH_svm.json in the repo root for the perf trajectory.  The
 # fresh run is then compared against the committed BENCH_svm.json
 # (ci/check_bench.py): a per-case accuracy drop beyond the tolerance
-# fails the tier, so silent accuracy drift cannot ship.
+# fails the tier, so silent accuracy drift cannot ship.  The serving
+# bench (benchmarks/bench_serve.py --smoke -> BENCH_serve.json) then runs
+# under the same guard at --tol 0.005: its accuracy field is the
+# served-vs-trained prediction agreement (1.0 on the bit-identical f32
+# path), so serving-tier drift hard-fails while p50/p99 latency
+# regressions warn.
 # Always prints the 10 slowest tests so tier creep stays visible.
 #
 # The distribution-layer tests (tests/test_dist.py, tests/test_fault.py,
@@ -63,6 +68,16 @@ if [[ "$bench" == 1 ]]; then
     python ci/check_bench.py "$ref" BENCH_svm.json
   else
     echo "check_bench: no committed BENCH_svm.json at HEAD — guard skipped"
+  fi
+  have_serve_ref=0
+  if git show HEAD:BENCH_serve.json > "$ref" 2>/dev/null; then
+    have_serve_ref=1
+  fi
+  python benchmarks/bench_serve.py --smoke --json BENCH_serve.json
+  if [[ "$have_serve_ref" == 1 ]]; then
+    python ci/check_bench.py "$ref" BENCH_serve.json --tol 0.005
+  else
+    echo "check_bench: no committed BENCH_serve.json at HEAD — guard skipped"
   fi
   exit 0
 fi

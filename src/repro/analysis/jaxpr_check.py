@@ -23,7 +23,13 @@ asserts whole-program facts no syntactic rule can prove:
     factorized artifacts land exactly where ``dist.api
     .node_partition_spec`` says, and the matmat/solve jaxprs pin their
     per-level intermediates with sharding constraints (the PR 3 route
-    around the XLA SPMD reshape miscompile).
+    around the XLA SPMD reshape miscompile);
+  * **serve-path** — the serving tier's batch scorer
+    (``repro.serve.batched_scores``) is callback-free and f32-accumulating
+    in BOTH compute dtypes (the bf16 block path is exactly where a missing
+    ``preferred_element_type`` would silently bite), and a tick stream
+    with varying queue occupancy compiles once per configured bucket —
+    never once per occupancy (the pad-to-bucket rule, end to end).
 
 Scope note: ``compression.compress`` is deliberately NOT traced here —
 it is host-orchestrated by design (proxy-index selection runs in numpy
@@ -330,6 +336,59 @@ def check_recompile_engine(c_grid=(0.5, 1.0, 2.0, 4.0)) -> list[Finding]:
     return findings
 
 
+def check_serve_path() -> list[Finding]:
+    """The serving tier's hot path, both halves of its contract:
+
+    1. ``batched_scores`` traced in f32 AND bf16 must show no sub-f32
+       dot_general accumulator and no host callback — the bf16 block
+       path is all einsums, so one missing ``preferred_element_type``
+       flips every score accumulation to bf16;
+    2. a ``ServingEngine`` fed ticks at many different queue occupancies
+       must compile its scorer exactly once per configured bucket (the
+       pad-to-bucket rule): a compile count tracking occupancy means the
+       padding broke and every distinct queue length pays an XLA compile.
+    """
+    from repro.core.engine import EngineModel
+    from repro.core.kernelfn import KernelSpec
+    from repro.serve import BatchPolicy, ServingEngine, batched_scores
+
+    d, f, p = 64, 4, 3
+    spec = KernelSpec(h=1.0)
+    xs = jnp.zeros((d, f), jnp.float32)
+    zy = jnp.zeros((d, p), jnp.float32)
+    biases = jnp.zeros((p,), jnp.float32)
+    xq = jnp.zeros((32, f), jnp.float32)
+    findings = []
+    for dt in ("float32", "bfloat16"):
+        jaxpr = jax.make_jaxpr(
+            lambda q, s, z, b: batched_scores(
+                q, s, z, b, spec=spec, block=16, compute_dtype=dt)
+        )(xq, xs, zy, biases)
+        findings += _check_traced(f"serve.batched_scores[{dt}]", jaxpr)
+
+    model = EngineModel(
+        x_perm=xs, z_y=zy, biases=biases,
+        classes=np.array([0.0, 1.0, 2.0], np.float32), spec=spec,
+        c_value=1.0, binary=False, strategy="ovr", task="svm", beta=8.0)
+    engine = ServingEngine(policy=BatchPolicy(buckets=(16, 64), block=16))
+    mid = engine.add_model(model)
+    occupancies = (1, 3, 7, 11, 16, 20, 40, 64)   # 2 buckets, 8 shapes
+    for occ in occupancies:
+        engine.score(mid, np.zeros((occ, f), np.float32))
+    compiles = engine.scorer_compiles()
+    if compiles is None:
+        findings.append(_finding(
+            "serve.tick", "cannot read the jit cache size on this jax "
+            "version — occupancy recompile guard inconclusive"))
+    elif compiles != 2:
+        findings.append(_finding(
+            "serve.tick",
+            f"{len(occupancies)} tick occupancies over 2 buckets compiled "
+            f"{compiles}x (expected 2): queue shapes are reaching the "
+            "scorer unpadded — the bucket padding rule broke"))
+    return findings
+
+
 def _constraint_spec_violations(entry: str, jaxpr, mesh) -> list[Finding]:
     """Each sharding_constraint pin on a node-stacked (ndim>=3)
     intermediate must carry EXACTLY the node_partition_spec placement —
@@ -421,6 +480,7 @@ def run_all() -> list[Finding]:
     findings += check_compress_kernels()
     findings += check_streamed_stage()
     findings += check_recompile_engine()
+    findings += check_serve_path()
     findings += check_mesh_placement()
     # informational skips are not failures
     return [f for f in findings if not f.message.startswith("skipped:")]

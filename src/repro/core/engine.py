@@ -37,7 +37,9 @@ from repro.core import admm as admm_mod
 from repro.core import compression, factorization, tree as tree_mod
 from repro.core import tasks as tasks_mod
 from repro.core.hss import HSSMatrix, shrink_report
-from repro.core.kernelfn import KernelSpec, kernel_matvec_streamed
+from repro.core.kernelfn import (
+    DEFAULT_SCORE_BLOCK, KernelSpec, kernel_matvec_streamed,
+)
 from repro.core.multiclass import ovo_problems, ovo_vote, ovr_problems
 from repro.core.svm import FitReport, compute_bias_batched
 from repro.dist import api as dist_api
@@ -74,6 +76,10 @@ class EngineModel:
     task: str = "svm"      # "svm" | "svr" | "oneclass"
     pairs: np.ndarray | None = None     # (P, 2) class indices, ovo only
     mesh: Mesh | None = None
+    # β of the factorization the model was trained on — the serve-time
+    # factorization-sharing cache key is (kernel, h, β, support set): two
+    # models agreeing on it were trained on the SAME K̃ + βI.
+    beta: float | None = None
     _score_fns: dict | None = None      # block -> cached jitted scorer
 
     @property
@@ -100,7 +106,8 @@ class EngineModel:
             self._score_fns[block] = fn
         return fn
 
-    def decision_function(self, x_test: Array, block: int = 2048) -> Array:
+    def decision_function(self, x_test: Array,
+                          block: int = DEFAULT_SCORE_BLOCK) -> Array:
         """Scores (n_test, P); single-column tasks (binary SVM, SVR,
         one-class) return the flat (n_test,) column."""
         x_test = jnp.asarray(x_test)
@@ -114,7 +121,8 @@ class EngineModel:
             return scores[:, 0]
         return scores
 
-    def predict(self, x_test: Array, block: int = 2048) -> Array:
+    def predict(self, x_test: Array,
+                block: int = DEFAULT_SCORE_BLOCK) -> Array:
         scores = self.decision_function(x_test, block=block)
         if self.task == "svr":           # regression: scores ARE predictions
             return scores
@@ -464,6 +472,7 @@ class HSSSVMEngine:
             classes=self._classes, spec=self.spec, c_value=c_value,
             binary=self._binary, strategy=self.strategy, task=self.task,
             pairs=self._pairs, mesh=self._mesh,
+            beta=float(self._fac.beta),
         )
         return model, (z, mu)
 

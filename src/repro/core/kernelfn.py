@@ -17,6 +17,12 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+# The ONE streaming block-size default shared by every predict/score path
+# (SVMModel / MulticlassSVMModel / EngineModel / the serving tier): the row
+# count of each test×support kernel block kept live during scoring.  Serving
+# tunes it in one place (serve.BatchPolicy.block defaults to it).
+DEFAULT_SCORE_BLOCK = 2048
+
 
 @dataclasses.dataclass(frozen=True)
 class KernelSpec:
@@ -110,7 +116,8 @@ def kernel_block(spec: KernelSpec, xa: Array, xb: Array) -> Array:
 
 
 def kernel_matvec_streamed(
-    spec: KernelSpec, x_rows: Array, x_cols: Array, v: Array, block: int = 4096
+    spec: KernelSpec, x_rows: Array, x_cols: Array, v: Array,
+    block: int = DEFAULT_SCORE_BLOCK,
 ) -> Array:
     """(K(x_rows, x_cols) @ v) without materializing the full block.
 

@@ -33,7 +33,9 @@ import numpy as np
 from repro.core import admm as admm_mod
 from repro.core import compression, factorization, tree as tree_mod
 from repro.core.hss import HSSMatrix, shrink_report
-from repro.core.kernelfn import KernelSpec, kernel_matvec_streamed
+from repro.core.kernelfn import (
+    DEFAULT_SCORE_BLOCK, KernelSpec, kernel_matvec_streamed,
+)
 from repro.core.svm import (
     FitReport, compute_bias_batched, resolve_rtol, run_grid_search,
 )
@@ -102,14 +104,16 @@ class MulticlassSVMModel:
     def n_classes(self) -> int:
         return int(self.classes.shape[0])
 
-    def decision_function(self, x_test: Array, block: int = 2048) -> Array:
+    def decision_function(self, x_test: Array,
+                          block: int = DEFAULT_SCORE_BLOCK) -> Array:
         """(n_test, P) per-problem scores, one streamed pass over the kernel."""
         scores = kernel_matvec_streamed(
             self.spec, x_test, self.x_perm, self.z_y, block=block
         )
         return scores + self.biases[None, :]
 
-    def predict(self, x_test: Array, block: int = 2048) -> Array:
+    def predict(self, x_test: Array,
+                block: int = DEFAULT_SCORE_BLOCK) -> Array:
         scores = self.decision_function(x_test, block=block)
         if self.strategy == "ovr":
             idx = jnp.argmax(scores, axis=1)

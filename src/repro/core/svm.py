@@ -27,7 +27,7 @@ import numpy as np
 from repro.core import admm as admm_mod
 from repro.core import compression, factorization, tree as tree_mod
 from repro.core.hss import HSSMatrix, shrink_report
-from repro.core.kernelfn import KernelSpec, kernel_block
+from repro.core.kernelfn import DEFAULT_SCORE_BLOCK, KernelSpec, kernel_block
 
 Array = jax.Array
 
@@ -42,7 +42,8 @@ class SVMModel:
     spec: KernelSpec
     c_value: float
 
-    def decision_function(self, x_test: Array, block: int = 2048) -> Array:
+    def decision_function(self, x_test: Array,
+                          block: int = DEFAULT_SCORE_BLOCK) -> Array:
         from repro.core.kernelfn import kernel_matvec_streamed
 
         scores = kernel_matvec_streamed(
@@ -50,8 +51,10 @@ class SVMModel:
         )
         return scores + self.bias
 
-    def predict(self, x_test: Array) -> Array:
-        return jnp.where(self.decision_function(x_test) >= 0, 1, -1)
+    def predict(self, x_test: Array,
+                block: int = DEFAULT_SCORE_BLOCK) -> Array:
+        return jnp.where(self.decision_function(x_test, block=block) >= 0,
+                         1, -1)
 
 
 @dataclasses.dataclass

@@ -12,12 +12,15 @@
 The kernel paths train their model on ONE shared HSS factorization via the
 unified engine (repro.core.engine.HSSSVMEngine; pass --svm-mesh to build
 and serve sharded over all local devices), then serve score/predict
-requests with the streamed block-kernel evaluator — each request batch
-costs one pass over the support set, and under a mesh each device scores
-only its local support shard (one psum per batch).  ``--task svm`` is
-k-class classification; ``--task svr`` serves ε-SVR regression values on
-the noisy-sine generator; ``--task oneclass`` serves ν one-class novelty
-scores on blobs-with-outliers (the knobs are --svm-eps / --svm-nu).
+requests through the serving tier (``repro.serve``): ``ServingEngine.score``
+is the one scoring entry point for every task decode, ``--registry DIR``
+round-trips the trained model through the persistent versioned registry
+(``--prune-tol`` applies the SV-pruning load transform), and
+``--serve-dtype bfloat16`` switches the score path to bf16 block evaluation
+with f32 accumulation.  ``--task svm`` is k-class classification; ``--task
+svr`` serves ε-SVR regression values on the noisy-sine generator; ``--task
+oneclass`` serves ν one-class novelty scores on blobs-with-outliers (the
+knobs are --svm-eps / --svm-nu).
 """
 from __future__ import annotations
 
@@ -141,35 +144,33 @@ def serve_svm(args) -> None:
           f"{rep.factorization_s:.2f}s / batched ADMM {rep.admm_s:.2f}s), "
           f"{quality}")
 
-    # Request loop: jit once on the fixed batch shape, then measure latency.
-    if task == "svm":
-        classes = jnp.asarray(model.classes)
+    # Request loop through the serving tier: ONE scoring entry point
+    # (ServingEngine.score) covers all four task decodes — no per-task
+    # closures here.  --registry round-trips the model through the
+    # persistent registry first (optionally SV-pruned on load).
+    from repro.serve import BatchPolicy, ModelRegistry, ServingEngine
 
-        @jax.jit
-        def score(xb):
-            s = model.decision_function(xb, block=args.batch)
-            return s, classes[jnp.argmax(s, axis=1)]
+    registry = None
+    if args.registry:
+        registry = ModelRegistry(args.registry)
+        version = registry.save(task, model)
+        print(f"registered model {task!r} v{version} under {args.registry}")
+    serve = ServingEngine(
+        policy=BatchPolicy(compute_dtype=args.serve_dtype), registry=registry)
+    if registry is not None:
+        mid = serve.load(task, prune_tol=args.prune_tol)
     else:
-        @jax.jit
-        def score(xb):
-            s = model.decision_function(xb, block=args.batch)
-            # svr: s IS the prediction; oneclass: sign flags outliers
-            return s, (s if task == "svr" else jnp.where(s >= 0, 1, -1))
+        mid = serve.add_model(model)
 
     rng = np.random.default_rng(1)
-    warm = jnp.asarray(xte[: args.batch])
-    jax.block_until_ready(score(warm))                # compile outside timing
+    serve.score(mid, xte[: args.batch])               # compile outside timing
 
-    lat = []
     t_serve = time.time()
     for _ in range(args.requests):
         idx = rng.integers(0, xte.shape[0], size=args.batch)
-        xb = jnp.asarray(xte[idx])
-        t0 = time.time()
-        _scores, pred = jax.block_until_ready(score(xb))
-        lat.append(time.time() - t0)
+        _scores, pred = serve.score(mid, xte[idx])
     t_serve = time.time() - t_serve
-    lat_ms = np.sort(np.array(lat)) * 1e3
+    lat_ms = np.sort(np.array(serve.drain_latencies())[-args.requests:]) * 1e3
     qps = args.requests * args.batch / max(t_serve, 1e-9)
     per_pass = (f"{args.svm_classes} classes" if task == "svm"
                 else {"svr": "regression values",
@@ -204,6 +205,14 @@ def main() -> None:
     ap.add_argument("--svm-mesh", action="store_true",
                     help="mesh-parallel HSS build/serve over all local "
                          "devices (core.engine.HSSSVMEngine)")
+    ap.add_argument("--registry", default=None,
+                    help="model-registry root: save the trained model there "
+                         "and serve it back through the registry")
+    ap.add_argument("--prune-tol", type=float, default=None,
+                    help="SV-pruning tolerance applied on registry load")
+    ap.add_argument("--serve-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="serving-tier kernel block compute dtype")
     args = ap.parse_args()
 
     if args.task in ("svm", "svr", "oneclass"):

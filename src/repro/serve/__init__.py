@@ -1,0 +1,30 @@
+"""Serving tier: model registry + batched-tick scoring engine.
+
+``ModelRegistry`` persists trained ``EngineModel``s as versioned,
+fingerprinted artifacts (through ``repro.ckpt``); ``ServingEngine`` holds
+many loaded models behind a shared-factorization LRU cache and scores
+queued requests in dynamically batched ticks.  See the module docstrings
+for the design.
+"""
+from repro.serve.engine import (
+    BatchPolicy, ServingEngine, Ticket, batched_scores, decode_predictions,
+    group_key,
+)
+from repro.serve.registry import (
+    FORMAT_VERSION, LoadInfo, ModelRegistry, RegistryError,
+    model_fingerprint,
+)
+
+__all__ = [
+    "BatchPolicy",
+    "ServingEngine",
+    "Ticket",
+    "batched_scores",
+    "decode_predictions",
+    "group_key",
+    "FORMAT_VERSION",
+    "LoadInfo",
+    "ModelRegistry",
+    "RegistryError",
+    "model_fingerprint",
+]

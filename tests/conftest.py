@@ -13,6 +13,25 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(scope="session")
+def trained_binary():
+    """One small trained binary SVM (engine kept for warm C-sweeps) shared
+    by the serving-tier and registry suites — training is the slow part."""
+    from repro.core.compression import CompressionParams
+    from repro.core.engine import HSSSVMEngine
+    from repro.core.kernelfn import KernelSpec
+
+    x, y = make_blobs(192, seed=11)
+    eng = HSSSVMEngine(
+        spec=KernelSpec(h=1.2),
+        comp=CompressionParams(rank=12, n_near=16, n_far=24),
+        leaf_size=32, max_it=20)
+    eng.prepare(x, y)
+    model, _ = eng.train(1.0)
+    xq, yq = make_blobs(64, seed=12)
+    return eng, model, xq, yq
+
+
 def make_blobs(n, n_features=4, seed=0, sep=2.5):
     """Two-class Gaussian blobs — the workhorse synthetic SVM dataset."""
     r = np.random.default_rng(seed)

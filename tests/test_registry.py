@@ -1,0 +1,175 @@
+"""Model-registry tests: bit-exact round trips, fingerprint trust, pruning."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ckpt
+from repro.serve import (
+    FORMAT_VERSION, ModelRegistry, RegistryError, model_fingerprint,
+)
+from test_serve import TASKS, mk_model
+
+
+@pytest.fixture()
+def registry(tmp_path):
+    return ModelRegistry(str(tmp_path / "models"))
+
+
+def _assert_models_equal(a, b):
+    assert np.array_equal(np.asarray(a.x_perm), np.asarray(b.x_perm))
+    assert np.array_equal(np.asarray(a.z_y), np.asarray(b.z_y))
+    assert np.array_equal(np.asarray(a.biases), np.asarray(b.biases))
+    assert np.array_equal(np.asarray(a.classes), np.asarray(b.classes))
+    if a.pairs is None:
+        assert b.pairs is None
+    else:
+        assert np.array_equal(np.asarray(a.pairs), np.asarray(b.pairs))
+    assert (a.task, a.strategy, a.binary) == (b.task, b.strategy, b.binary)
+    assert (a.spec.name, a.spec.h, a.spec.impl) \
+        == (b.spec.name, b.spec.h, b.spec.impl)
+    assert a.c_value == b.c_value and a.beta == b.beta
+
+
+@pytest.mark.parametrize("task", TASKS)
+def test_round_trip_bit_identical(registry, task):
+    """save → load returns bit-identical duals/bias/metadata for every
+    task shape (svm binary, OVR, OVO, SVR, one-class)."""
+    model = mk_model(task, seed=13)
+    version = registry.save(task, model)
+    loaded, info = registry.load(task)
+    assert version == 1 and info.version == 1
+    assert info.n_support_kept == info.n_support_stored
+    _assert_models_equal(model, loaded)
+    # and the loaded model scores identically
+    xq = np.random.default_rng(2).normal(
+        size=(20, model.x_perm.shape[1])).astype(np.float32)
+    assert np.array_equal(np.asarray(model.predict(jnp.asarray(xq))),
+                          np.asarray(loaded.predict(jnp.asarray(xq))))
+
+
+def test_versions_accumulate_and_load_by_version(registry):
+    m1, m2 = mk_model("binary", seed=1), mk_model("binary", seed=2)
+    assert registry.save("m", m1) == 1
+    assert registry.save("m", m2) == 2
+    assert registry.versions("m") == [1, 2]
+    assert registry.names() == ["m"]
+    latest, info = registry.load("m")
+    _assert_models_equal(m2, latest)
+    v1, info1 = registry.load("m", version=1)
+    _assert_models_equal(m1, v1)
+    assert info.version == 2 and info1.version == 1
+
+
+def test_missing_model_raises(registry):
+    with pytest.raises(RegistryError, match="no such model"):
+        registry.load("nope")
+    with pytest.raises(RegistryError, match="no such model"):
+        registry.load("nope", version=3)
+
+
+def test_bad_names_rejected(registry):
+    for name in ("", ".hidden", f"a{__import__('os').sep}b"):
+        with pytest.raises(RegistryError, match="bad model name"):
+            registry.save(name, mk_model("binary"))
+
+
+def test_foreign_artifact_rejected(registry, tmp_path):
+    """A training checkpoint (or anything without the serve fingerprint)
+    under a model directory must be refused, not reinterpreted."""
+    path = registry._dir("foreign")
+    ckpt.save_checkpoint(
+        path, dict(z=np.zeros((4, 1), np.float32)), step=1,
+        extra=dict(stream_fingerprint={"kind": "hss_stream_build"}))
+    with pytest.raises(RegistryError, match="foreign artifact"):
+        registry.load("foreign")
+
+
+def test_stale_format_version_rejected(registry):
+    model = mk_model("binary", seed=3)
+    fp = model_fingerprint(model)
+    fp["format_version"] = FORMAT_VERSION + 1
+    ckpt.save_checkpoint(
+        registry._dir("stale"),
+        dict(x_perm=np.asarray(model.x_perm), z_y=np.asarray(model.z_y),
+             biases=np.asarray(model.biases),
+             classes=np.asarray(model.classes)),
+        step=1, extra=dict(fingerprint=fp))
+    with pytest.raises(RegistryError, match="stale artifact format"):
+        registry.load("stale")
+
+
+def test_tampered_shape_fingerprint_rejected(registry):
+    model = mk_model("binary", seed=4)
+    fp = model_fingerprint(model)
+    fp["n_support"] = fp["n_support"] + 1
+    ckpt.save_checkpoint(
+        registry._dir("bad"),
+        dict(x_perm=np.asarray(model.x_perm), z_y=np.asarray(model.z_y),
+             biases=np.asarray(model.biases),
+             classes=np.asarray(model.classes)),
+        step=1, extra=dict(fingerprint=fp))
+    with pytest.raises(RegistryError, match="fingerprint/n_support"):
+        registry.load("bad")
+
+
+def test_missing_array_rejected(registry):
+    model = mk_model("binary", seed=5)
+    ckpt.save_checkpoint(
+        registry._dir("partial"),
+        dict(x_perm=np.asarray(model.x_perm)),
+        step=1, extra=dict(fingerprint=model_fingerprint(model)))
+    with pytest.raises(RegistryError, match="missing"):
+        registry.load("partial")
+
+
+# --------------------------------------------------------------------- #
+# the SV-pruning load transform                                          #
+# --------------------------------------------------------------------- #
+def test_prune_drops_zero_weight_rows_exactly(registry):
+    model = mk_model("binary", seed=6)
+    zy = np.asarray(model.z_y).copy()
+    zy[::3] = 0.0                       # every third row carries no weight
+    import dataclasses
+    model = dataclasses.replace(model, z_y=jnp.asarray(zy))
+    registry.save("z", model)
+    loaded, info = registry.load("z", prune_tol=0.0)
+    keep = np.abs(zy[:, 0]) > 0
+    assert info.n_support_kept == int(keep.sum())
+    assert info.pruned_frac > 0.3
+    assert np.array_equal(np.asarray(loaded.x_perm),
+                          np.asarray(model.x_perm)[keep])
+    assert np.array_equal(np.asarray(loaded.z_y), zy[keep])
+
+
+def test_prune_degenerate_keeps_top_sv(registry):
+    model = mk_model("binary", seed=7)
+    registry.save("d", model)
+    loaded, info = registry.load("d", prune_tol=1e9)   # prunes everything
+    assert info.n_support_kept == 1
+    top = int(np.argmax(np.abs(np.asarray(model.z_y)[:, 0])))
+    assert np.array_equal(np.asarray(loaded.x_perm),
+                          np.asarray(model.x_perm)[top][None])
+
+
+def test_prune_golden_accuracy(registry, trained_binary):
+    """On the trained golden case, a pruned load must stay within 0.01
+    holdout accuracy of the unpruned model (approximate-extreme-points:
+    near-zero duals contribute nothing detectable)."""
+    _, model, xq, yq = trained_binary
+    registry.save("golden", model)
+    full, _ = registry.load("golden")
+    pruned, info = registry.load("golden", prune_tol=1e-4)
+    assert info.n_support_kept < info.n_support_stored  # pads at least
+    acc_full = float(np.mean(
+        np.asarray(full.predict(jnp.asarray(xq))) == yq))
+    acc_pruned = float(np.mean(
+        np.asarray(pruned.predict(jnp.asarray(xq))) == yq))
+    assert acc_full >= 0.9                      # the golden case itself
+    assert abs(acc_full - acc_pruned) <= 0.01
+    # and served predictions through the engine agree with direct predict
+    from repro.serve import ServingEngine
+
+    serve = ServingEngine(registry=registry)
+    mid = serve.load("golden", prune_tol=1e-4)
+    _, preds = serve.score(mid, xq)
+    assert np.array_equal(preds, np.asarray(pruned.predict(jnp.asarray(xq))))
