@@ -79,6 +79,10 @@ if [[ "$bench" == 1 ]]; then
   else
     echo "check_bench: no committed BENCH_serve.json at HEAD — guard skipped"
   fi
+  # ADMM-free task smoke: KRR end-to-end through the serving tier (train is
+  # ONE multi-RHS solve; the request loop exercises the raw-value decode).
+  python -m repro.launch.serve --task krr --svm-train 2048 --batch 64 \
+    --requests 5
   exit 0
 fi
 

@@ -1,0 +1,71 @@
+"""Lanczos spectral embedding on the O(N r) HSS kernel operator.
+
+``engine.top_eigenpairs(k)`` runs full-reorthogonalized Lanczos where every
+operator application is the HSS telescoping matvec — top-k eigenpairs of
+the N×N Gaussian kernel matrix without ever forming it.  The embedding
+rows (eigenvectors scaled by √eigenvalue, kernel-PCA style) unfold the
+concentric-rings dataset that k-means on raw coordinates cannot split:
+with a bandwidth below the ring gap the leading eigenvectors are localized
+per ring, so cluster purity jumps from chance to ~0.8.
+
+  PYTHONPATH=src python examples/spectral_embedding.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.compression import CompressionParams
+from repro.core.engine import HSSSVMEngine
+from repro.core.kernelfn import KernelSpec
+from repro.data import synthetic
+
+COMP = CompressionParams(rank=32, n_near=48, n_far=64)
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 30, seed: int = 0):
+    """Seeded Lloyd iterations — enough for a purity readout."""
+    r = np.random.default_rng(seed)
+    centers = x[r.choice(x.shape[0], size=k, replace=False)]
+    for _ in range(iters):
+        d = ((x[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+        assign = d.argmin(1)
+        for c in range(k):
+            if np.any(assign == c):
+                centers[c] = x[assign == c].mean(0)
+    return assign
+
+
+def purity(assign: np.ndarray, labels: np.ndarray) -> float:
+    """Fraction of points in their cluster's majority class."""
+    hit = 0
+    for c in np.unique(assign):
+        _, counts = np.unique(labels[assign == c], return_counts=True)
+        hit += counts.max()
+    return hit / len(labels)
+
+
+def rings_embedding(n: int = 4096, k: int = 3):
+    x, y = synthetic.circles(n, n_features=2, gap=0.8, seed=0)
+    # Only the compressed operator matters here: prepare under the krr task
+    # (dummy targets) so no classification labels are needed.
+    engine = HSSSVMEngine(spec=KernelSpec(h=0.25), comp=COMP, leaf_size=256,
+                          task="krr")
+    t0 = time.time()
+    engine.prepare(x, np.zeros(n, np.float32))
+    evals, _ = engine.top_eigenpairs(k)
+    emb = engine.spectral_embed(k)
+    t_build = time.time() - t0
+    print(f"concentric rings, n={n}: top-{k} Lanczos eigenpairs of the "
+          f"{n}x{n} kernel in {t_build:.1f}s (never formed densely)")
+    print("  eigenvalues:", np.round(np.asarray(evals), 1).tolist())
+    p_raw = purity(kmeans(x, 2), y)
+    p_emb = purity(kmeans(emb, 2), y)
+    print(f"  k-means purity: raw coords {p_raw:.3f} -> "
+          f"spectral embedding {p_emb:.3f}")
+
+
+if __name__ == "__main__":
+    rings_embedding()

@@ -29,7 +29,11 @@ asserts whole-program facts no syntactic rule can prove:
     in BOTH compute dtypes (the bf16 block path is exactly where a missing
     ``preferred_element_type`` would silently bite), and a tick stream
     with varying queue occupancy compiles once per configured bucket —
-    never once per occupancy (the pad-to-bucket rule, end to end).
+    never once per occupancy (the pad-to-bucket rule, end to end);
+  * **kernel-linalg** — the RAW streamed scoring matvec probed with bf16
+    inputs (the path the serve check's f32 probes never reached), plus
+    the KRR solve and Lanczos sweeps of the kernel linear-algebra task
+    family, all callback-free and f32-accumulating.
 
 Scope note: ``compression.compress`` is deliberately NOT traced here —
 it is host-orchestrated by design (proxy-index selection runs in numpy
@@ -389,6 +393,47 @@ def check_serve_path() -> list[Finding]:
     return findings
 
 
+def check_kernel_linalg() -> list[Finding]:
+    """The kernel linear-algebra family's traced paths.
+
+    1. the RAW streamed scoring matvec (``kernel_matvec_streamed``) probed
+       with bf16 rows/support/coefficients — exactly the path the layer-2
+       sweep never saw before this check (``batched_scores`` routes bf16
+       through its own einsum twin, so the raw path's bare ``@``
+       accumulations sat outside every earlier probe);
+    2. the KRR/GP train step (``krr.krr_solve``) on a bf16-stored
+       factorization — ONE multi-RHS solve, callback-free, f32-accumulating;
+    3. the Lanczos sweep (``lanczos.top_eigenpairs``) on the HSS matvec —
+       the scan body's reorthogonalization and Ritz recombination are all
+       contractions and must hold the f32 convention too.
+    """
+    from repro.core import krr as krr_mod
+    from repro.core import lanczos as lanczos_mod
+    from repro.core.kernelfn import KernelSpec, kernel_matvec_streamed
+
+    findings = []
+    spec = KernelSpec(h=1.0)
+    for dt in (jnp.float32, jnp.bfloat16):
+        xr = jnp.zeros((40, 4), dt)
+        xc = jnp.zeros((64, 4), dt)
+        v = jnp.zeros((64, 3), dt)
+        jaxpr = jax.make_jaxpr(
+            lambda a, c, w: kernel_matvec_streamed(spec, a, c, w, block=16)
+        )(xr, xc, v)
+        findings += _check_traced(
+            f"kernel_matvec_streamed[{jnp.dtype(dt).name}]", jaxpr)
+
+    hss, fac, _ = build_probe(store_dtype="bfloat16")
+    targets = jnp.zeros((hss.n, 2), jnp.float32)
+    findings += _check_traced(
+        "krr.krr_solve",
+        jax.make_jaxpr(lambda b: krr_mod.krr_solve(fac, b))(targets))
+    findings += _check_traced(
+        "lanczos.top_eigenpairs",
+        jax.make_jaxpr(lambda: lanczos_mod.top_eigenpairs(hss, 4, seed=0))())
+    return findings
+
+
 def _constraint_spec_violations(entry: str, jaxpr, mesh) -> list[Finding]:
     """Each sharding_constraint pin on a node-stacked (ndim>=3)
     intermediate must carry EXACTLY the node_partition_spec placement —
@@ -481,6 +526,7 @@ def run_all() -> list[Finding]:
     findings += check_streamed_stage()
     findings += check_recompile_engine()
     findings += check_serve_path()
+    findings += check_kernel_linalg()
     findings += check_mesh_placement()
     # informational skips are not failures
     return [f for f in findings if not f.message.startswith("skipped:")]

@@ -14,6 +14,10 @@ from repro.core.factorization import (
 )
 from repro.core.hss import HSSMatrix, shrink_to_fit
 from repro.core.kernelfn import KernelSpec, kernel_block
+from repro.core.krr import grid_search_gp, grid_search_krr, krr_solve
+# NOTE: the raw ``lanczos`` sweep is deliberately NOT re-exported — binding
+# that name here would shadow the ``repro.core.lanczos`` submodule attribute.
+from repro.core.lanczos import spectral_embed, top_eigenpairs
 from repro.core.multiclass import (
     MulticlassHSSSVMTrainer, MulticlassSVMModel, grid_search_multiclass,
 )
@@ -33,6 +37,8 @@ __all__ = [
     "HSSFactorization", "factorize", "factorize_sharded",
     "hss_solve", "hss_solve_mat",
     "HSSMatrix", "shrink_to_fit", "KernelSpec", "kernel_block",
+    "grid_search_gp", "grid_search_krr", "krr_solve",
+    "spectral_embed", "top_eigenpairs",
     "HSSSVMTrainer", "SVMModel", "grid_search",
     "MulticlassHSSSVMTrainer", "MulticlassSVMModel", "grid_search_multiclass",
     "ClusterTree", "build_tree", "pad_dataset",

@@ -73,7 +73,7 @@ class EngineModel:
     c_value: float         # the task knob it was trained at (C / ε / ν)
     binary: bool
     strategy: str = "ovr"
-    task: str = "svm"      # "svm" | "svr" | "oneclass"
+    task: str = "svm"      # "svm" | "svr" | "oneclass" | "krr" | "gp"
     pairs: np.ndarray | None = None     # (P, 2) class indices, ovo only
     mesh: Mesh | None = None
     # β of the factorization the model was trained on — the serve-time
@@ -117,15 +117,15 @@ class EngineModel:
         else:
             scores = self._mesh_scorer(block)(x_test, self.x_perm, self.z_y)
         scores = scores + self.biases[None, :]
-        if self.binary or self.task in ("svr", "oneclass"):
+        if self.binary or self.task in ("svr", "oneclass", "krr", "gp"):
             return scores[:, 0]
         return scores
 
     def predict(self, x_test: Array,
                 block: int = DEFAULT_SCORE_BLOCK) -> Array:
         scores = self.decision_function(x_test, block=block)
-        if self.task == "svr":           # regression: scores ARE predictions
-            return scores
+        if self.task in ("svr", "krr", "gp"):
+            return scores               # regression: scores ARE predictions
         if self.task == "oneclass":      # +1 inlier / −1 outlier
             return jnp.where(scores >= 0, 1, -1)
         if self.binary:
@@ -153,7 +153,13 @@ class HSSSVMEngine:
       * ``"svr"``      — ε-SVR; the knob is ε (the C box bound is the
         ``svr_c`` field), ``y`` holds float regression targets;
       * ``"oneclass"`` — ν one-class SVM; the knob is ν, ``y`` is ignored
-        (unsupervised — pass None).
+        (unsupervised — pass None);
+      * ``"krr"`` / ``"gp"`` — kernel ridge regression / GP posterior mean
+        (repro.core.krr): the knob is the ridge / noise λ, which rides the
+        factorization's β shift slot, and ``train`` is ONE multi-RHS solve
+        with ZERO ADMM iterations (``FitReport.iters_run == (0,)``); ``y``
+        holds float regression targets.  ``"gp"`` additionally exposes
+        ``log_marginal`` for (h, λ) grid scoring.
 
     ``tol`` enables the paper's residual stopping rule: a problem's ADMM
     updates freeze once max(primal, dual) < tol and ``FitReport.iters_run``
@@ -179,7 +185,7 @@ class HSSSVMEngine:
     mesh: Mesh | None = None
     strategy: str = "ovr"         # multiclass reduction: "ovr" | "ovo"
     store_dtype: str | None = None
-    task: str = "svm"             # "svm" | "svr" | "oneclass"
+    task: str = "svm"             # "svm" | "svr" | "oneclass" | "krr" | "gp"
     svr_c: float = 1.0            # SVR box bound C (ε is the train knob)
     tol: float | None = None      # ADMM residual early-stop threshold
     stream: compression.StreamParams | None = None   # out-of-core build
@@ -203,6 +209,7 @@ class HSSSVMEngine:
     # multilevel warm start inputs + adaptive-ρ machinery
     _x_raw: np.ndarray | None = None
     _y_raw: np.ndarray | None = None
+    _perm_host: np.ndarray | None = None   # tree perm (host) — pad unmapping
     _xp_host: np.ndarray | None = None     # padded+permuted points (host)
     _maskp_host: np.ndarray | None = None  # (d,) real-point mask (host)
     _fac_cache: dict | None = None         # beta -> factorization
@@ -235,7 +242,7 @@ class HSSSVMEngine:
         """Pad + tree + compress ONCE + factorize ONCE (Alg. 3 lines 1–6)."""
         if self.strategy not in ("ovr", "ovo"):
             raise ValueError(f"unknown strategy {self.strategy!r}")
-        if self.task not in ("svm", "svr", "oneclass"):
+        if self.task not in ("svm", "svr", "oneclass", "krr", "gp"):
             raise ValueError(f"unknown task {self.task!r}")
         x = np.asarray(x, np.float32)
         if self.task == "svm":
@@ -251,8 +258,9 @@ class HSSSVMEngine:
                 vals = set()
             self._binary = classes.shape[0] == 2 and vals == {-1.0, 1.0}
         else:
-            if self.task == "svr" and y is None:
-                raise ValueError("task='svr' needs regression targets")
+            if self.task in ("svr", "krr", "gp") and y is None:
+                raise ValueError(
+                    f"task={self.task!r} needs regression targets")
             if y is None:                # one-class is unsupervised
                 y = np.zeros(x.shape[0], np.float32)
             y = np.asarray(y)
@@ -328,6 +336,7 @@ class HSSSVMEngine:
         self._classes, self._pairs = classes, pairs
         self._jit_admm = self._jit_bias = None
         self._x_raw, self._y_raw = x, (None if y is None else np.asarray(y))
+        self._perm_host = t.perm
         self._xp_host = xp_host
         self._maskp_host = maskp.astype(np.float32)
         self._fac_cache = {float(beta): fac}
@@ -393,6 +402,8 @@ class HSSSVMEngine:
         exactly once.
         """
         assert self._fac is not None, "call prepare() first"
+        if self.task in ("krr", "gp"):
+            return self._train_krr(c_value)
         if self.task == "oneclass" and not 0.0 < c_value <= 1.0:
             # nu > 1 makes e'alpha = 1 infeasible (box mass < 1), nu <= 0
             # divides by zero — either silently yields a garbage model.
@@ -475,6 +486,94 @@ class HSSSVMEngine:
             beta=float(self._fac.beta),
         )
         return model, (z, mu)
+
+    # ------------------------------------------------------------------ #
+    def _train_krr(self, lam: float) -> tuple[EngineModel, tuple[Array, Array]]:
+        """KRR / GP-mean train: ONE multi-RHS solve, ZERO ADMM iterations.
+
+        The knob λ rides the factorization's β shift slot: each distinct λ
+        refactorizes the shared compression once (``_fac_for`` caches per
+        visited λ, exactly like the adaptive-ρ rescale path) and the train
+        step is a single ``solve_mat`` on the (d, P) target block.  The
+        solve is jitted with the factorization as a pytree argument; β is a
+        static field, so each λ traces once — noise next to its O(N r²)
+        refactorization.
+        """
+        from repro.core import krr as krr_mod
+
+        if not lam > 0.0:
+            raise ValueError(f"{self.task} needs lambda > 0, got {lam}")
+        ys, pmask = self._ys, self._pmask
+        n_prob = ys.shape[0]
+        if self._jit_admm is None:
+            self._jit_admm = jax.jit(krr_mod.krr_solve)
+        with self._active():
+            t0 = time.perf_counter()
+            fac = self._fac_for(float(lam))
+            jax.block_until_ready(fac.root_lu)
+            t1 = time.perf_counter()
+            # pads decouple exactly ((1+λ)I block, zero targets); the mask
+            # only clips factorization float noise off the pad coefficients
+            alpha = self._jit_admm(fac, ys.T) * pmask.T
+            jax.block_until_ready(alpha)
+            t2 = time.perf_counter()
+        if self._report is not None:
+            self._report.factorization_s += t1 - t0
+            self._report.admm_s += t2 - t1
+            self._report.iters_run = (0,) * n_prob
+        model = EngineModel(
+            x_perm=self._hss.x, z_y=alpha,
+            biases=jnp.zeros((n_prob,), jnp.float32),
+            classes=self._classes, spec=self.spec, c_value=lam,
+            binary=False, strategy=self.strategy, task=self.task,
+            pairs=None, mesh=self._mesh, beta=float(fac.beta),
+        )
+        return model, (alpha, alpha)
+
+    def log_marginal(self, lam: float, n_probes: int = 4,
+                     num_iters: int = 20, seed: int = 0) -> float:
+        """GP log marginal likelihood estimate at noise λ (see
+        ``krr.gp_log_marginal``) — the ``task="gp"`` (h, λ) grid score."""
+        from repro.core import krr as krr_mod
+
+        assert self._fac is not None, "call prepare() first"
+        if self.task not in ("krr", "gp"):
+            raise ValueError(f"log_marginal needs task='krr'/'gp', "
+                             f"got {self.task!r}")
+        fac = self._fac_for(float(lam))
+        with self._active():
+            return krr_mod.gp_log_marginal(
+                self._hss, fac, self._ys[0], mask=self._pmask[0],
+                n_probes=n_probes, num_iters=num_iters, seed=seed)
+
+    def top_eigenpairs(self, k: int, num_iters: int | None = None,
+                       seed: int = 0) -> tuple[Array, Array]:
+        """Leading k eigenpairs of the compressed kernel (Lanczos on the
+        O(N r) matvec), in permuted/padded row order — any prepared task."""
+        from repro.core import lanczos as lanczos_mod
+
+        assert self._hss is not None, "call prepare() first"
+        with self._active():
+            return lanczos_mod.top_eigenpairs(
+                self._hss, k, num_iters=num_iters, seed=seed)
+
+    def spectral_embed(self, k: int, num_iters: int | None = None,
+                       seed: int = 0) -> np.ndarray:
+        """Kernel-PCA coordinates (n, k) for the ORIGINAL input rows.
+
+        Eigenvectors scaled by sqrt(eigenvalue), mapped back through the
+        tree permutation with pad rows dropped.  Keep k below the count of
+        kernel eigenvalues exceeding 1 — the pad block of a padded build
+        contributes an eigenvalue cluster at ≈ 1 (see repro.core.lanczos).
+        """
+        evals, vecs = self.top_eigenpairs(k, num_iters=num_iters, seed=seed)
+        emb = (np.asarray(jax.device_get(vecs))
+               * np.sqrt(np.maximum(np.asarray(jax.device_get(evals)), 0.0)))
+        n = self._x_raw.shape[0]
+        out = np.zeros((n, k), np.float32)
+        real = self._perm_host < n
+        out[self._perm_host[real]] = emb[real]
+        return out
 
     # ------------------------------------------------------------------ #
     @staticmethod

@@ -94,10 +94,11 @@ class HSSMatrix:
             return self.ranks
         import numpy as np
 
-        out = [int(np.max(np.asarray(jax.device_get(self.leaf_ranks))))]
-        for r in self.level_ranks:
-            out.append(int(np.max(np.asarray(jax.device_get(r)))))
-        return out
+        # ONE batched host transfer for all K rank vectors: this runs on
+        # every shrink_report (i.e. every train), and per-level device_get
+        # calls would serialize K+1 blocking round-trips.
+        host = jax.device_get((self.leaf_ranks, *self.level_ranks))
+        return [int(np.max(np.asarray(r))) for r in host]
 
     def stored_rank_sum(self) -> int:
         """Σ_levels n_k · (stored rank cap): the paper's O(N r) storage knob
@@ -286,7 +287,7 @@ def shrink_to_fit(hss: HSSMatrix, mesh=None, multiple: int = 1) -> HSSMatrix:
 
     r0 = new_caps[0]
     u_leaf = put(hss.u_leaf[:, :, :r0])
-    skel_leaf = hss.skel_leaf[:, :r0]
+    skel_leaf = put(hss.skel_leaf[:, :r0])
     transfers, skels, b_mats = [], [], []
     for k in range(1, K + 1):
         rc = new_caps[k - 1]                     # child-level cap
@@ -299,7 +300,7 @@ def shrink_to_fit(hss: HSSMatrix, mesh=None, multiple: int = 1) -> HSSMatrix:
         t = t.reshape(n_k, 2, two_rc_old // 2, t.shape[2])
         t = t[:, :, :rc, :rk].reshape(n_k, 2 * rc, rk)
         transfers.append(put(t))
-        skels.append(hss.skels[k - 1][:, :rk])
+        skels.append(put(hss.skels[k - 1][:, :rk]))
     return dataclasses.replace(
         hss,
         u_leaf=u_leaf,

@@ -38,16 +38,29 @@ class KernelSpec:
 
 
 def _sqdist(xa: Array, xb: Array) -> Array:
-    """Pairwise squared distances via the matmul expansion (MXU-friendly)."""
-    na = jnp.sum(xa * xa, axis=-1)[:, None]
-    nb = jnp.sum(xb * xb, axis=-1)[None, :]
-    cross = xa @ xb.T
+    """Pairwise squared distances via the matmul expansion (MXU-friendly).
+
+    The cross term accumulates in f32 (``preferred_element_type``): bf16
+    inputs — the serving tier's compute_dtype="bfloat16" path feeds them in
+    here — would otherwise accumulate the feature contraction in bf16 and
+    hand systematically-off distances to ``exp``.  The f32 cross term also
+    promotes the norms, so distances come out f32 regardless of input dtype.
+    """
+    na = jnp.sum(xa * xa, axis=-1, dtype=jnp.float32)[:, None]
+    nb = jnp.sum(xb * xb, axis=-1, dtype=jnp.float32)[None, :]
+    cross = jnp.matmul(xa, xb.T, preferred_element_type=jnp.float32)
     return jnp.maximum(na + nb - 2.0 * cross, 0.0)
 
 
 def gaussian_block_xla(xa: Array, xb: Array, h: float) -> Array:
-    """K(xa, xb) for row blocks xa (ma, r), xb (mb, r) -> (ma, mb)."""
-    return jnp.exp(_sqdist(xa, xb) * (-0.5 / (h * h)))
+    """K(xa, xb) for row blocks xa (ma, r), xb (mb, r) -> (ma, mb).
+
+    Distances and exp run in f32 (see ``_sqdist``); the block is then cast
+    back to the input dtype — a bf16 build (store_dtype="bfloat16") must get
+    bf16 blocks, with only the internal ACCUMULATION widened.
+    """
+    block = jnp.exp(_sqdist(xa, xb) * (-0.5 / (h * h)))
+    return block.astype(jnp.result_type(xa.dtype, xb.dtype))
 
 
 def laplacian_block_xla(xa: Array, xb: Array, h: float,
@@ -133,7 +146,10 @@ def kernel_matvec_streamed(
     xr = xr.reshape(-1, block, x_rows.shape[1])
 
     def body(xblk):
-        return kernel_block(spec, xblk, x_cols) @ v
+        # f32 accumulation over the (potentially huge) support axis — a bf16
+        # coefficient vector must not drag the reduction down to bf16.
+        return jnp.matmul(kernel_block(spec, xblk, x_cols), v,
+                          preferred_element_type=jnp.float32)
 
     out = jax.lax.map(body, xr)
     out = out.reshape(-1) if v.ndim == 1 else out.reshape(-1, v.shape[1])

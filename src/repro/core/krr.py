@@ -1,0 +1,168 @@
+"""KRR and GP posterior mean as ONE multi-RHS solve on the HSS factorization.
+
+The kernel linear-algebra members of the task family: where the box-QP tasks
+(repro.core.tasks) iterate ADMM against K_β⁻¹, kernel ridge regression and
+the GP posterior mean ARE the solve —
+
+  KRR:   α = (K̃ + λI)⁻¹ y,     f(x) = Σ αᵢ K(xᵢ, x)
+  GP:    identical mean (λ = observation noise σ²); model selection adds the
+         log marginal likelihood
+           log p(y) = −½ yᵀα − ½ log det(K̃ + λI) − (n/2) log 2π
+         whose logdet is estimated by Hutchinson probes with Lanczos (Gauss)
+         quadrature on the O(N r) matvec — cheap enough to run inside an
+         (h, λ) grid scan.
+
+λ rides the factorization's existing β shift slot, so a λ sweep on one
+compression is a sequence of O(N r²) refactorizations cached per visited λ
+(``HSSSVMEngine._fac_for``), and the trained model scores through the same
+``kernel_matvec_streamed`` path as every other task: zero new serving
+machinery.  Padded datasets decouple exactly — pad rows of y are zero and
+the pad block of K̃ + λI is ≈ (1 + λ)I, so the real-point restriction of the
+padded solve is the unpadded solution (the mask still zeroes the pad
+coefficients defensively against factorization float noise).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lanczos import lanczos, tridiag_eigh
+
+Array = jax.Array
+
+
+def krr_solve(fac, targets: Array) -> Array:
+    """α = (K̃ + λI)⁻¹ Y for target columns Y (d, P); λ is ``fac.beta``.
+
+    The whole train step of ``task="krr"`` / ``task="gp"``: one telescoping
+    multi-RHS solve, ZERO ADMM iterations.  jit-compatible with ``fac`` as a
+    pytree argument (β is a static field, so each distinct λ traces once —
+    the refactorization it rides along with dominates anyway).
+    """
+    return fac.solve_mat(targets)
+
+
+def gp_log_marginal(hss, fac, y: Array, mask: Array | None = None,
+                    n_probes: int = 4, num_iters: int = 20, seed: int = 0
+                    ) -> float:
+    """Hutchinson + Lanczos-quadrature estimate of the GP log marginal.
+
+    The data-fit term −½ yᵀ(K̃ + λI)⁻¹y is exact (one solve on the
+    factorization); log det(K̃ + λI) = tr log(K̃ + λI) is estimated with
+    ``n_probes`` Rademacher probes, each integrated by an ``num_iters``-point
+    Gauss quadrature from the Lanczos tridiagonal of the shifted matvec —
+    O(n_probes · num_iters · N r) total, no dense matrix ever formed.
+
+    ``mask`` (1 real / 0 pad) removes the pad block's exact contribution
+    n_pad · log(1 + λ) and counts only real points in the 2π term, so the
+    estimate ranks (h, λ) on the data, not on the padding.  Deterministic
+    for a fixed seed — grid scans compare like against like.
+    """
+    f32 = jnp.float32
+    y = jnp.asarray(y, f32).reshape(-1)
+    n = y.shape[0]
+    lam = float(fac.beta)
+    alpha = fac.solve_mat(y[:, None])[:, 0]
+    fit = -0.5 * float(jnp.einsum("n,n->", y, alpha,
+                                  preferred_element_type=f32))
+
+    def matvec(v):
+        return hss.matvec(v) + lam * v
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_probes)
+    logdet = 0.0
+    for key in keys:
+        z = jax.random.rademacher(key, (n,), f32)
+        alphas, betas, _ = lanczos(matvec, z, num_iters)
+        theta, u = tridiag_eigh(alphas, betas[:-1])
+        w = u[0, :] ** 2                     # Gauss weights: (e₁ᵀuᵢ)²
+        quad = jnp.einsum("m,m->", w, jnp.log(jnp.maximum(theta, 1e-12)),
+                          preferred_element_type=f32)
+        logdet += float(n) * float(quad)     # ‖z‖² = n for Rademacher probes
+    logdet /= n_probes
+
+    n_eff = n
+    if mask is not None:
+        n_real = int(np.asarray(jax.device_get(mask)).sum())
+        logdet -= (n - n_real) * math.log1p(lam)
+        n_eff = n_real
+    return fit - 0.5 * logdet - 0.5 * n_eff * math.log(2.0 * math.pi)
+
+
+# --------------------------------------------------------------------- #
+# validation metric + grid drivers (λ sweeps in place of C)             #
+# --------------------------------------------------------------------- #
+def krr_score(model, x_val: Array, y_val: Array) -> float:
+    """Negated RMSE (higher is better, run_grid_search maximizes)."""
+    pred = model.predict(x_val)
+    return -float(jnp.sqrt(jnp.mean((pred - jnp.asarray(y_val)) ** 2)))
+
+
+def grid_search_krr(
+    x: np.ndarray,
+    y: np.ndarray,
+    x_val: np.ndarray,
+    y_val: np.ndarray,
+    hs: Sequence[float],
+    lams: Sequence[float],
+    trainer_kwargs: dict | None = None,
+    rtol: float | None = None,
+) -> tuple[object, dict]:
+    """(h, λ) grid for KRR — λ sweeps in place of C.
+
+    Per h: ONE compression serves the whole λ sweep; each λ refactorizes the
+    shared representation (cached per visited λ) and solves once.  Scores
+    are negated validation RMSE.
+    """
+    from repro.core.engine import HSSSVMEngine
+    from repro.core.kernelfn import KernelSpec
+    from repro.core.svm import resolve_rtol, run_grid_search
+
+    kw = resolve_rtol(trainer_kwargs, rtol)
+    return run_grid_search(
+        lambda h: HSSSVMEngine(spec=KernelSpec(h=h), task="krr", **kw),
+        x, y, x_val, y_val, hs, lams, score_fn=krr_score)
+
+
+def grid_search_gp(
+    x: np.ndarray,
+    y: np.ndarray,
+    hs: Sequence[float],
+    lams: Sequence[float],
+    trainer_kwargs: dict | None = None,
+    rtol: float | None = None,
+    n_probes: int = 4,
+    num_iters: int = 20,
+    seed: int = 0,
+) -> tuple[object, dict]:
+    """(h, λ) grid for GP regression scored by the TRAINING log marginal.
+
+    No validation split: GP model selection maximizes log p(y | h, λ) on the
+    training data itself (the marginal already charges for complexity).
+    Returns (best posterior-mean model, dict with per-(h, λ) scores and the
+    winning pair) in the same shape as the other grid drivers.
+    """
+    from repro.core.engine import HSSSVMEngine
+    from repro.core.kernelfn import KernelSpec
+    from repro.core.svm import resolve_rtol
+
+    kw = resolve_rtol(trainer_kwargs, rtol)
+    results: dict = {}
+    best_model, best_key, best_score = None, None, -math.inf
+    for h in hs:
+        engine = HSSSVMEngine(spec=KernelSpec(h=float(h)), task="gp", **kw)
+        engine.prepare(x, y)
+        for lam in lams:
+            model, _ = engine.train(float(lam))
+            score = engine.log_marginal(float(lam), n_probes=n_probes,
+                                        num_iters=num_iters, seed=seed)
+            results[(float(h), float(lam))] = dict(log_marginal=score)
+            if score > best_score:
+                best_model, best_key, best_score = model, (h, lam), score
+    return best_model, dict(results=results, best_h=float(best_key[0]),
+                            best_lam=float(best_key[1]),
+                            best_log_marginal=best_score)

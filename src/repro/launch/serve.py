@@ -8,6 +8,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve --task svr --batch 256
   PYTHONPATH=src python -m repro.launch.serve --task oneclass --batch 256
+  PYTHONPATH=src python -m repro.launch.serve --task krr --batch 256
 
 The kernel paths train their model on ONE shared HSS factorization via the
 unified engine (repro.core.engine.HSSSVMEngine; pass --svm-mesh to build
@@ -20,7 +21,9 @@ round-trips the trained model through the persistent versioned registry
 with f32 accumulation.  ``--task svm`` is k-class classification; ``--task
 svr`` serves ε-SVR regression values on the noisy-sine generator; ``--task
 oneclass`` serves ν one-class novelty scores on blobs-with-outliers (the
-knobs are --svm-eps / --svm-nu).
+knobs are --svm-eps / --svm-nu); ``--task krr`` / ``--task gp`` serve kernel
+ridge / GP posterior-mean regression values trained by ONE multi-RHS solve
+with zero ADMM iterations (the knob is --svm-lam, the ridge/noise λ).
 """
 from __future__ import annotations
 
@@ -96,6 +99,11 @@ def serve_svm(args) -> None:
             "noisy_sine", n_train=args.svm_train, n_test=n_test, seed=0,
             noise=0.1)
         knob, h = args.svm_eps, 1.0 if args.svm_h is None else args.svm_h
+    elif task in ("krr", "gp"):
+        xtr, ytr, xte, yte = synthetic.train_test(
+            "noisy_sine", n_train=args.svm_train, n_test=n_test, seed=0,
+            noise=0.1)
+        knob, h = args.svm_lam, 1.0 if args.svm_h is None else args.svm_h
     elif task == "oneclass":
         xtr, ytr = synthetic.blobs_with_outliers(
             args.svm_train, n_features=4, outlier_frac=0.1, seed=0)
@@ -127,6 +135,12 @@ def serve_svm(args) -> None:
         quality = (f"holdout rmse "
                    f"{float(jnp.sqrt(jnp.mean((pred - yte) ** 2))):.4f}")
         head = f"ε-SVR (ε={knob})"
+    elif task in ("krr", "gp"):
+        quality = (f"holdout rmse "
+                   f"{float(jnp.sqrt(jnp.mean((pred - yte) ** 2))):.4f}, "
+                   f"admm iters {engine.report.iters_run}")
+        name = "KRR" if task == "krr" else "GP mean"
+        head = f"{name} (λ={knob})"
     elif task == "oneclass":
         from repro.core.tasks import oneclass_metrics
 
@@ -174,6 +188,8 @@ def serve_svm(args) -> None:
     qps = args.requests * args.batch / max(t_serve, 1e-9)
     per_pass = (f"{args.svm_classes} classes" if task == "svm"
                 else {"svr": "regression values",
+                      "krr": "regression values",
+                      "gp": "posterior means",
                       "oneclass": "novelty scores"}[task])
     print(f"served {args.requests} requests x batch {args.batch}: "
           f"{qps:.0f} points/s, latency p50 {lat_ms[len(lat_ms)//2]:.2f}ms "
@@ -184,7 +200,7 @@ def serve_svm(args) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--task", default="lm",
-                    choices=["lm", "svm", "svr", "oneclass"])
+                    choices=["lm", "svm", "svr", "oneclass", "krr", "gp"])
     ap.add_argument("--arch", default=None, help="LM arch (required for lm)")
     ap.add_argument("--preset", default="tiny", choices=["tiny", "full"])
     ap.add_argument("--batch", type=int, default=4)
@@ -202,6 +218,8 @@ def main() -> None:
                     help="ε tube half-width (task svr)")
     ap.add_argument("--svm-nu", type=float, default=0.1,
                     help="ν outlier-fraction bound (task oneclass)")
+    ap.add_argument("--svm-lam", type=float, default=1.0,
+                    help="ridge / GP noise λ (tasks krr and gp)")
     ap.add_argument("--svm-mesh", action="store_true",
                     help="mesh-parallel HSS build/serve over all local "
                          "devices (core.engine.HSSSVMEngine)")
@@ -215,7 +233,7 @@ def main() -> None:
                     help="serving-tier kernel block compute dtype")
     args = ap.parse_args()
 
-    if args.task in ("svm", "svr", "oneclass"):
+    if args.task in ("svm", "svr", "oneclass", "krr", "gp"):
         serve_svm(args)
     else:
         if args.arch is None:

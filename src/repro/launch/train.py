@@ -6,6 +6,9 @@
   PYTHONPATH=src python -m repro.launch.train --task svm \
       --svm-train 16384 --svm-c-grid 0.1,1,10
 
+  PYTHONPATH=src python -m repro.launch.train --task krr \
+      --svm-train 16384 --svm-c-grid 0.5,2,8
+
 LM presets: tiny (CPU-runnable reduced config), full (the assigned config —
 requires the production mesh).  Fault tolerance: checkpoints every
 --ckpt-every steps (async), resumes from the latest checkpoint, runs under a
@@ -14,7 +17,10 @@ StepGuard deadline, and supports failure-injection drills (--fail-at).
 The SVM task drives repro.core.engine.HSSSVMEngine: when more than one
 device is visible the whole pipeline (compression, factorization, ADMM
 C-grid, bias, holdout scoring) runs node/sample-sharded over a mesh of all
-local devices.
+local devices.  --task krr / --task gp run the ADMM-free kernel-ridge / GP
+posterior-mean path on the same engine: --svm-c-grid then sweeps the ridge
+λ (one cached refactorization + one multi-RHS solve each) and the holdout
+metric is RMSE.
 """
 from __future__ import annotations
 
@@ -32,8 +38,12 @@ def train_svm(args) -> None:
     from repro.core.kernelfn import KernelSpec
     from repro.data import synthetic
 
+    task = args.task
+    dataset = args.svm_dataset
+    if task in ("krr", "gp") and dataset == "blobs":
+        dataset = "noisy_sine"        # regression demo default
     xtr, ytr, xte, yte = synthetic.train_test(
-        args.svm_dataset, args.svm_train, args.svm_test, seed=0)
+        dataset, args.svm_train, args.svm_test, seed=0)
     mesh = None
     if jax.device_count() > 1 and not args.svm_local:
         mesh = jax.make_mesh((jax.device_count(),), ("data",))
@@ -41,7 +51,7 @@ def train_svm(args) -> None:
     engine = HSSSVMEngine(
         spec=KernelSpec(h=args.svm_h),
         comp=CompressionParams(rank=args.svm_rank, n_near=48, n_far=64),
-        leaf_size=args.svm_leaf, max_it=10, mesh=mesh)
+        leaf_size=args.svm_leaf, max_it=10, mesh=mesh, task=task)
     t0 = time.time()
     rep = engine.prepare(xtr, ytr)
     print(f"prepare: compress {rep.compression_s:.1f}s, factorize "
@@ -49,16 +59,26 @@ def train_svm(args) -> None:
           f"beta {rep.beta:g}")
     c_grid = [float(c) for c in args.svm_c_grid.split(",")]
     yte_j = jnp.asarray(yte)
+    knob_name = "λ" if task in ("krr", "gp") else "C"
     for c, model in zip(c_grid, engine.train_grid(c_grid)):
-        acc = float(jnp.mean(model.predict(jnp.asarray(xte)) == yte_j))
-        print(f"C={c:g}: holdout acc {acc:.4f}")
+        pred = model.predict(jnp.asarray(xte))
+        if task in ("krr", "gp"):
+            rmse = float(jnp.sqrt(jnp.mean((pred - yte_j) ** 2)))
+            print(f"{knob_name}={c:g}: holdout rmse {rmse:.4f} "
+                  f"(admm iters {engine.report.iters_run})")
+        else:
+            acc = float(jnp.mean(pred == yte_j))
+            print(f"{knob_name}={c:g}: holdout acc {acc:.4f}")
+    stage = "solve" if task in ("krr", "gp") else "ADMM"
     print(f"done in {time.time() - t0:.1f}s "
-          f"(ADMM total {engine.report.admm_s:.2f}s across the C grid)")
+          f"({stage} total {engine.report.admm_s:.2f}s across the "
+          f"{knob_name} grid)")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--task", default="lm", choices=["lm", "svm"])
+    ap.add_argument("--task", default="lm",
+                    choices=["lm", "svm", "krr", "gp"])
     ap.add_argument("--arch", default=None, help="LM arch (required for lm)")
     ap.add_argument("--preset", default="tiny", choices=["tiny", "small",
                                                          "full"])
@@ -82,7 +102,7 @@ def main() -> None:
                     help="force the single-device engine path")
     args = ap.parse_args()
 
-    if args.task == "svm":
+    if args.task in ("svm", "krr", "gp"):
         train_svm(args)
         return
     if args.arch is None:

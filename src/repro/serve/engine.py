@@ -141,7 +141,7 @@ def decode_predictions(scores: np.ndarray, *, task: str, binary: bool,
     """(decision values, predictions) from a model's (n, P) score columns,
     matching ``EngineModel.decision_function`` / ``predict`` conventions:
     single-column tasks return the flat score column."""
-    if task == "svr":
+    if task in ("svr", "krr", "gp"):     # regression: raw-value decode
         flat = scores[:, 0]
         return flat, flat
     if task == "oneclass" or binary:

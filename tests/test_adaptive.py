@@ -338,3 +338,58 @@ def test_engine_adaptive_8_devices_matches_local():
     """)
     r = _run_sub(code)
     assert "ADAPTIVE_ENGINE_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_shrink_to_fit_sharding_matches_partition_spec_8_devices():
+    """EVERY node-stacked field of the shrunk matrix must carry exactly the
+    sharding node_partition_spec prescribes for its shape — including the
+    2-D skeleton index arrays, whose post-slice device_put pins them
+    replicated instead of leaking the gather's inferred output sharding."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding
+        from repro.core import compression, tree as tree_mod
+        from repro.core.hss import shrink_to_fit
+        from repro.core.kernelfn import KernelSpec
+        from repro.dist.api import node_partition_spec
+
+        rng = np.random.default_rng(0)
+        n, leaf = 4096, 64
+        x = rng.normal(size=(n, 2)).astype(np.float32)
+        t = tree_mod.build_tree(x, leaf_size=leaf)
+        params = compression.CompressionParams(
+            rank=24, n_near=32, n_far=48, rtol=1e-4)
+        mesh = jax.make_mesh((8,), ("data",))
+        hss = compression.compress_sharded(
+            x[t.perm], t, KernelSpec(h=1.5), params, mesh)
+        shr = shrink_to_fit(hss, mesh=mesh)
+
+        def want(a):
+            return NamedSharding(
+                mesh, node_partition_spec(mesh, a.ndim, a.shape[0]))
+
+        checked = 0
+        fields = dict(d_leaf=shr.d_leaf, u_leaf=shr.u_leaf,
+                      skel_leaf=shr.skel_leaf)
+        for k, a in enumerate(shr.transfers):
+            fields[f"transfers[{k}]"] = a
+        for k, a in enumerate(shr.skels):
+            fields[f"skels[{k}]"] = a
+        for k, a in enumerate(shr.b_mats):
+            fields[f"b_mats[{k}]"] = a
+        for name, a in fields.items():
+            assert a.sharding.is_equivalent_to(want(a), a.ndim), (
+                name, a.shape, a.sharding)
+            checked += 1
+        # the 2-D index arrays must have come out REPLICATED
+        assert shr.skel_leaf.sharding.is_fully_replicated
+        assert all(s.sharding.is_fully_replicated for s in shr.skels)
+        print("SHRINK_SHARDING_OK", checked)
+    """)
+    r = _run_sub(code)
+    assert "SHRINK_SHARDING_OK" in r.stdout, r.stdout + r.stderr

@@ -16,7 +16,7 @@ from repro.core.engine import EngineModel
 from repro.core.kernelfn import DEFAULT_SCORE_BLOCK, KernelSpec
 from repro.serve import BatchPolicy, ServingEngine, batched_scores
 
-TASKS = ("binary", "ovr", "ovo", "svr", "oneclass")
+TASKS = ("binary", "ovr", "ovo", "svr", "oneclass", "krr", "gp")
 
 
 def mk_model(task="binary", d=96, f=4, h=1.3, beta=64.0, seed=0):
@@ -36,7 +36,7 @@ def mk_model(task="binary", d=96, f=4, h=1.3, beta=64.0, seed=0):
         spec=KernelSpec(h=h), c_value=1.0,
         binary=task == "binary",
         strategy="ovo" if task == "ovo" else "ovr",
-        task=task if task in ("svr", "oneclass") else "svm",
+        task=task if task in ("svr", "oneclass", "krr", "gp") else "svm",
         pairs=pairs, beta=beta)
 
 
@@ -83,7 +83,7 @@ def test_bf16_parity_tolerance(task):
     np.testing.assert_allclose(s16, s32, atol=BF16_ATOL)
     # decisions may legitimately flip only within the tolerance band of a
     # decision boundary; away from it they must agree
-    if task == "svr":
+    if task in ("svr", "krr", "gp"):
         np.testing.assert_allclose(p16, p32, atol=BF16_ATOL)
     else:
         margin = (np.min(np.abs(s32), axis=-1) if s32.ndim > 1
